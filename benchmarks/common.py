@@ -1,0 +1,26 @@
+"""Shared benchmark helpers.  CSV rows: name,us_per_call,derived."""
+from __future__ import annotations
+
+import os
+import time
+
+
+def row(name: str, us: float, **derived) -> str:
+    d = ";".join(f"{k}={v}" for k, v in derived.items())
+    line = f"{name},{us:.1f},{d}"
+    print(line, flush=True)
+    return line
+
+
+def quick() -> bool:
+    """REPRO_BENCH_FULL=1 switches to paper-scale graphs."""
+    return os.environ.get("REPRO_BENCH_FULL", "0") != "1"
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.perf_counter() - self.t0) * 1e6

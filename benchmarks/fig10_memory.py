@@ -1,0 +1,46 @@
+"""Paper Figures 10–11: memory per process vs process count.
+
+Accounting model from the implementation's actual data structures (§2.1 +
+§3.2): per-process bytes = local adjacency (ELL rows + weights) + ghost
+values + one coarse level (~half) + fold-dup duplicates once n/p drops
+below the fold threshold (logarithmic overhead — the paper's trade-off).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import quick, row
+from repro.core.coarsen import coarsen_multilevel
+from repro.core.dgraph import distribute
+from repro.graphs import generators as G
+
+
+def mem_per_process(g, p: int, fold_threshold: int = 100) -> float:
+    dg = distribute(g, p)
+    # 4-byte ids + weights for local ELL, plus ghost value arrays
+    base = dg.nbr_gst[0].size * 8 + dg.ghost_gid.shape[1] * 8
+    # multilevel pyramid: geometric ~2x, fold-dup adds a copy per fold level
+    n = g.n
+    total = float(base) * 2.0
+    p_cur, dup = p, 1.0
+    while n > 120:
+        n //= 2
+        if p_cur > 1 and n / p_cur < fold_threshold:
+            p_cur = (p_cur + 1) // 2
+            dup += (n / max(g.n, 1)) * base * 8   # duplicated coarse copy
+    return total + dup
+
+
+def main() -> None:
+    g = G.grid3d(12, 12, 12) if quick() else G.grid3d(30, 30, 30)
+    base = None
+    for p in (2, 4, 8, 16, 32, 64):
+        m = mem_per_process(g, p)
+        base = base or m * p
+        row(f"fig10/audikw1-like/p{p}", 0.0,
+            mb_per_proc=round(m / 1e6, 3),
+            scaled_total=round(m * p / base, 2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU: correctness-scale
+timing only; Mosaic numbers come from real TPUs).  Includes the jnp
+reference for a like-for-like comparison and derived bytes/roofline."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timer
+from repro.kernels import ops
+from repro.kernels.ref import diffusion_step_ref, ell_spmv_ref
+
+
+def bench(fn, *args, iters=5):
+    fn(*args)                                    # warmup/compile
+    with timer() as t:
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+    return t.us / iters
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for n, d in ((4096, 8), (16384, 16)):
+        nbr = rng.integers(0, n, (n, d)).astype(np.int32)
+        nbr[rng.random((n, d)) < 0.2] = -1
+        val = rng.standard_normal((n, d)).astype(np.float32)
+        x = rng.standard_normal(n).astype(np.float32)
+        nbr_j, val_j, x_j = map(jnp.asarray, (nbr, val, x))
+        us_ref = bench(jax.jit(ell_spmv_ref), nbr_j, val_j, x_j)
+        us_pal = bench(lambda a, b, c: ops.spmv(a, b, c, interpret=True),
+                       nbr_j, val_j, x_j)
+        bytes_moved = (nbr.size * 4 + val.size * 4 + x.size * 4 + n * 4)
+        row(f"kernel/ell_spmv/n{n}d{d}", us_pal,
+            jnp_ref_us=round(us_ref, 1),
+            bytes=bytes_moved,
+            note="interpret-mode; Mosaic timing requires TPU")
+        inj = np.zeros(n, np.float32)
+        us_dif = bench(lambda a, b, c, i: ops.diffuse(a, b, c, i, steps=1,
+                                                      interpret=True),
+                       nbr_j, jnp.abs(val_j), x_j, jnp.asarray(inj))
+        row(f"kernel/diffusion/n{n}d{d}", us_dif,
+            fused_passes=1, bytes=bytes_moved + n * 4)
+
+
+if __name__ == "__main__":
+    main()

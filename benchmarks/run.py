@@ -1,0 +1,35 @@
+"""Benchmark driver — one module per paper table/figure + TPU-adaptation
+extras.  Prints ``name,us_per_call,derived`` CSV rows.
+
+Default is the quick suite (CI-scale graphs); set REPRO_BENCH_FULL=1 for
+paper-scale runs.  Select subsets: ``python -m benchmarks.run table2 fig10``.
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.util import enable_compile_cache
+
+MODULES = [
+    ("table1", "benchmarks.table1_graphs"),
+    ("table2", "benchmarks.table2_opc"),
+    ("fig10", "benchmarks.fig10_memory"),
+    ("band", "benchmarks.band_ablation"),
+    ("folddup", "benchmarks.folddup_ablation"),
+    ("kernel", "benchmarks.kernel_bench"),
+]
+
+
+def main() -> None:
+    enable_compile_cache()
+    want = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    for key, module in MODULES:
+        if want and key not in want:
+            continue
+        print(f"# --- {module} ---", flush=True)
+        __import__(module, fromlist=["main"]).main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Table 1: graph inventory + sequential-ordering OPC (O_SS analog).
+
+The UF matrices are not available offline; the suite regenerates the same
+application families at benchmark scale (DESIGN.md §'graphs').
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import quick, row, timer
+from repro.core.baselines import pt_scotch_like
+from repro.graphs import generators as G
+from repro.sparse.symbolic import nnz_opc
+
+
+def suite():
+    if quick():
+        return {
+            "altr4-like":      lambda: G.grid3d(14, 14, 14),
+            "bmw32-like":      lambda: G.grid3d(18, 18, 18),
+            "audikw1-like":    lambda: G.grid3d(12, 12, 12, stencil=27),
+            "conesphere-like": lambda: G.rgg2d(10_000, seed=3),
+            "qimonda-like":    lambda: G.circuit(10_000, seed=7),
+            "thread-like":     lambda: G.knn3d(3_000, k=48, seed=1),
+            "cage-like":       lambda: G.cage_like(5_000, seed=5),
+        }
+    return G.SUITE
+
+
+def main() -> None:
+    for name, ctor in suite().items():
+        g = ctor()
+        with timer() as t:
+            perm = pt_scotch_like(g, seed=0, nproc=1)
+        nnz, opc = nnz_opc(g, perm)
+        row(f"table1/{name}", t.us, V=g.n, E=g.m,
+            avg_degree=round(2 * g.m / g.n, 2), NNZ=nnz, O_SS=f"{opc:.3e}")
+
+
+if __name__ == "__main__":
+    main()

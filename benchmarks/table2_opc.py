@@ -1,0 +1,55 @@
+"""Paper Tables 2–3 / Figures 6–9: OPC and time vs process count,
+PT-Scotch-like vs ParMETIS-like.
+
+Claims under test: O_PTS stays ~flat (sometimes improves) with p; O_PM
+degrades severely; O_PM/O_PTS grows with p (paper: up to ~2× on 64 procs).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import quick, row, timer
+from repro.core.baselines import parmetis_like, pt_scotch_like
+from repro.graphs import generators as G
+from repro.sparse.symbolic import nnz_opc
+
+
+def suite():
+    if quick():
+        return {
+            "altr4-like":   lambda: G.grid3d(11, 11, 11),
+            "audikw1-like": lambda: G.grid3d(10, 10, 10, stencil=27),
+            "qimonda-like": lambda: G.circuit(6_000, seed=7),
+            "cage-like":    lambda: G.cage_like(3_000, seed=5),
+        }
+    return {
+        "altr4-like":   lambda: G.grid3d(30, 30, 30),
+        "audikw1-like": lambda: G.grid3d(21, 21, 21, stencil=27),
+        "qimonda-like": lambda: G.circuit(120_000, seed=7),
+        "cage-like":    lambda: G.cage_like(40_000, seed=5),
+    }
+
+
+def procs():
+    return (2, 8, 64) if quick() else (2, 4, 8, 16, 32, 64)
+
+
+def main() -> None:
+    for name, ctor in suite().items():
+        g = ctor()
+        for p in procs():
+            with timer() as t_pts:
+                perm = pt_scotch_like(g, seed=0, nproc=p)
+            o_pts = nnz_opc(g, perm)[1]
+            with timer() as t_pm:
+                perm_pm = parmetis_like(g, seed=0, nproc=p)
+            o_pm = nnz_opc(g, perm_pm)[1]
+            row(f"table2/{name}/p{p}", t_pts.us,
+                O_PTS=f"{o_pts:.3e}", O_PM=f"{o_pm:.3e}",
+                t_PTS_s=round(t_pts.us / 1e6, 2),
+                t_PM_s=round(t_pm.us / 1e6, 2),
+                ratio=round(o_pm / o_pts, 3))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: order a 3D FE-mesh-like graph with the PT-Scotch pipeline.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Shows the paper's full flow — multilevel coarsening with fold-dup, greedy
+initial separators, band extraction (width 3), multi-sequential FM — and
+compares OPC/NNZ against natural order, minimum degree, and the
+ParMETIS-like strict-refinement baseline.
+"""
+import time
+
+import numpy as np
+
+from repro.core.baselines import (mindeg_ordering, natural, parmetis_like,
+                                  pt_scotch_like)
+from repro.core.nd import NDConfig
+from repro.graphs.generators import grid3d
+from repro.sparse.symbolic import nnz_opc
+from repro.util import enable_compile_cache
+
+
+def main():
+    enable_compile_cache()
+    g = grid3d(12, 12, 12)
+    print(f"graph: 12×12×12 grid  |V|={g.n}  |E|={g.m}")
+    rows = []
+    for name, fn in [
+        ("natural", lambda: natural(g)),
+        ("minimum-degree", lambda: mindeg_ordering(g)),
+        ("parmetis-like p=16", lambda: parmetis_like(g, seed=0, nproc=16)),
+        ("pt-scotch p=16", lambda: pt_scotch_like(g, seed=0, nproc=16)),
+        ("pt-scotch p=16 (no band)",
+         lambda: pt_scotch_like(g, seed=0, nproc=16,
+                                cfg=NDConfig(use_band=False))),
+    ]:
+        t0 = time.time()
+        perm = fn()
+        dt = time.time() - t0
+        nnz, opc = nnz_opc(g, perm)
+        rows.append((name, nnz, opc, dt))
+        print(f"{name:28s} NNZ={nnz:>9,}  OPC={opc:.3e}  ({dt:.1f}s)")
+    base = rows[0][2]
+    best = min(r[2] for r in rows[1:])
+    print(f"\nfill-reducing orderings cut OPC by "
+          f"{base / best:.1f}× vs natural order")
+
+
+if __name__ == "__main__":
+    main()

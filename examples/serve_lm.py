@@ -1,0 +1,44 @@
+"""Batched serving demo: prefill + greedy decode with per-layer caches.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch jamba-v0.1-52b
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models.lm import init_params
+from repro.serve.engine import greedy_generate
+from repro.util import enable_compile_cache
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+    enable_compile_cache()
+
+    cfg = get_config(args.arch).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+    t0 = time.time()
+    out = greedy_generate(params, cfg, prompt, args.new_tokens,
+                          s_max=args.prompt_len + args.new_tokens)
+    dt = time.time() - t0
+    toks = args.batch * args.new_tokens
+    print(f"arch={cfg.name} (reduced) batch={args.batch}")
+    print(f"generated {toks} tokens in {dt:.1f}s "
+          f"({toks/dt:.1f} tok/s incl. compile)")
+    print("sample continuation ids:", np.asarray(out)[0][:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Final assembly: merge whisper re-runs, enrich, render tables into
+EXPERIMENTS.md placeholders.
+
+    PYTHONPATH=src python scripts_finalize.py
+"""
+import io
+import json
+import os
+import sys
+from contextlib import redirect_stdout
+
+sys.path.insert(0, "src")
+
+from repro.launch.enrich import enrich               # noqa: E402
+from repro.launch.report import dryrun_table, roofline_table  # noqa: E402
+
+MAIN = "dryrun_report.json"
+WHISPER = "/tmp/whisper_cells.json"
+
+records = json.load(open(MAIN))
+if os.path.exists(WHISPER):
+    fixed = {(r["arch"], r["shape"], r["mesh"]): r
+             for r in json.load(open(WHISPER)) if r["status"] == "OK"}
+    out = []
+    for r in records:
+        key = (r["arch"], r["shape"], r["mesh"])
+        if key in fixed:
+            if r["status"] == "FAIL":
+                out.append(fixed.pop(key))     # replace failed cell
+            else:
+                out.append(r)                  # keep original OK
+                fixed.pop(key)
+        else:
+            out.append(r)
+    out.extend(fixed.values())                 # genuinely new cells
+    records = out
+records = enrich(records)
+json.dump(records, open(MAIN, "w"), indent=1)
+
+dry = dryrun_table(records)
+roof_s = roofline_table(records, "single")
+roof_m = roofline_table(records, "multi")
+
+exp = open("EXPERIMENTS.md").read()
+exp = exp.replace("<!-- DRYRUN_TABLE -->", dry)
+exp = exp.replace("<!-- ROOFLINE_TABLE -->",
+                  "### Single-pod (16×16 = 256 chips)\n\n" + roof_s
+                  + "\n\n### Multi-pod (2×16×16 = 512 chips)\n\n" + roof_m)
+open("EXPERIMENTS.md", "w").write(exp)
+n_ok = sum(r["status"] == "OK" for r in records)
+n_skip = sum(r["status"] == "SKIP" for r in records)
+n_fail = sum(r["status"] == "FAIL" for r in records)
+print(f"finalized: {n_ok} OK / {n_skip} SKIP / {n_fail} FAIL "
+      f"({len(records)} records)")

@@ -1,0 +1,9 @@
+"""Remove FAIL records from dryrun_report.json so --append re-runs them."""
+import json
+import sys
+
+path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_report.json"
+records = json.load(open(path))
+keep = [r for r in records if r["status"] != "FAIL"]
+print(f"dropping {len(records) - len(keep)} FAIL records")
+json.dump(keep, open(path, "w"), indent=1)

@@ -1,0 +1,91 @@
+"""Distributed band-graph extraction (paper §3.3).
+
+Vertices at distance ≤ ``width`` (paper's principled default: 3) from the
+projected separator are kept; two *anchor* vertices per side absorb the
+remainder, carrying its total vertex weight so balance is preserved, and are
+connected to the last band layer of their side.  The distance sweep is the
+paper's "spreading distance information from all of the separator vertices,
+using our halo exchange routine" — here a vectorized ELL relaxation in JAX
+(one halo exchange per width step in the distributed version).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph
+
+UNREACH = np.int32(2 ** 30)
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def bfs_distance(nbr: jax.Array, src_mask: jax.Array, width: int) -> jax.Array:
+    """dist[v] = min(graph distance to src, width+1), by width relaxations."""
+    valid = nbr >= 0
+    nbrs = jnp.where(valid, nbr, 0)
+    dist = jnp.where(src_mask, 0, UNREACH).astype(jnp.int32)
+    for _ in range(width):
+        dn = jnp.where(valid, dist[nbrs], UNREACH)
+        dist = jnp.minimum(dist, jnp.min(dn, axis=1) + 1)
+    return dist
+
+
+def extract_band(g: Graph, part: np.ndarray, width: int = 3
+                 ) -> Tuple[Graph, np.ndarray, np.ndarray, np.ndarray]:
+    """Build the band graph around the separator.
+
+    Returns (band_graph, band_part, locked, old_ids):
+      * band_graph has n_band + 2 vertices; the last two are the anchors
+        (side 0, side 1), weighted with the out-of-band part weights;
+      * band_part / locked are the FM initial state (anchors locked);
+      * old_ids maps band vertex -> original vertex (-1 for anchors).
+    """
+    nbr, _ = g.to_ell()
+    dist = np.asarray(bfs_distance(jnp.asarray(nbr),
+                                   jnp.asarray(part == 2), width))
+    in_band = dist <= width
+    sub, old_ids = g.induced_subgraph(in_band)
+    nb = sub.n
+    band_part = part[old_ids].astype(np.int8)
+
+    # anchors: out-of-band weight per side, wired to the last layer
+    out_mask = ~in_band
+    w_out0 = int(g.vwgt[out_mask & (part == 0)].sum())
+    w_out1 = int(g.vwgt[out_mask & (part == 1)].sum())
+    last = dist[old_ids] == width
+    last0 = np.nonzero(last & (band_part == 0))[0]
+    last1 = np.nonzero(last & (band_part == 1))[0]
+    a0, a1 = nb, nb + 1
+    extra = []
+    if len(last0):
+        extra.append(np.stack([np.full(len(last0), a0), last0], 1))
+    if len(last1):
+        extra.append(np.stack([np.full(len(last1), a1), last1], 1))
+    src = np.repeat(np.arange(nb), sub.degrees())
+    edges = np.stack([src, sub.adjncy.astype(np.int64)], 1)
+    if extra:
+        edges = np.concatenate([edges[edges[:, 0] < edges[:, 1]]] + extra)
+    else:
+        edges = edges[edges[:, 0] < edges[:, 1]]
+    vwgt = np.concatenate([sub.vwgt, [max(w_out0, 0), max(w_out1, 0)]])
+    ewgt = np.ones(len(edges), dtype=np.int64)
+    band = Graph.from_edges(nb + 2, edges, vwgt=vwgt, ewgt=ewgt)
+
+    band_part_full = np.concatenate([band_part, np.int8([0, 1])])
+    locked = np.zeros(nb + 2, bool)
+    locked[a0:] = True
+    old_full = np.concatenate([old_ids, [-1, -1]])
+    return band, band_part_full, locked, old_full
+
+
+def project_band(part: np.ndarray, band_part: np.ndarray,
+                 old_ids: np.ndarray) -> np.ndarray:
+    """Write the refined band partition back into the full part vector."""
+    out = part.copy()
+    real = old_ids >= 0
+    out[old_ids[real]] = band_part[real]
+    return out

@@ -1,0 +1,117 @@
+"""Multilevel coarsening with fold-dup (paper §3.2).
+
+The matching data-plane runs in JAX (``matching.py``); the coarse-graph
+build is a host-side reshuffle (sort + segment-accumulate) — the control
+plane / data plane split discussed in DESIGN.md §2.
+
+Fold-dup: "coarsened graphs are folded and duplicated ... every subgroup of
+processes that hold a working copy of the graph being able to perform an
+almost-complete independent multi-level computation".  Quality-wise the
+mechanism is: once the average number of vertices per process drops below
+``fold_threshold`` (paper default 100), the process group splits into two
+halves, each holding a *duplicate*, so from that point on independent
+multilevel instances run and the best projected separator wins.  We model
+the instance tree faithfully: ``n_instances`` doubles at every fold level
+until each (simulated) process holds one copy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.matching import heavy_edge_matching
+
+
+def _bucket(x: int, mult: int = 64) -> int:
+    """Round up to a power of two (pads ELL shapes so jit caches are reused)."""
+    v = mult
+    while v < x:
+        v *= 2
+    return v
+
+
+def match_graph(g: Graph, seed: int, rounds: int = 8) -> np.ndarray:
+    """Heavy-edge matching of g via the JAX kernel (padded ELL)."""
+    dmax = int(g.degrees().max()) if g.n else 1
+    nbr, wgt = g.to_ell(dmax)
+    n_pad = _bucket(g.n)
+    d_pad = _bucket(dmax, 8)
+    nbr_p = -np.ones((n_pad, d_pad), dtype=np.int32)
+    wgt_p = np.zeros((n_pad, d_pad), dtype=np.int32)
+    nbr_p[:g.n, :dmax] = nbr
+    wgt_p[:g.n, :dmax] = wgt
+    m = heavy_edge_matching(jax.numpy.asarray(nbr_p), jax.numpy.asarray(wgt_p),
+                            jax.random.PRNGKey(seed), rounds=rounds)
+    m = np.asarray(m)[:g.n]
+    return np.minimum(m, g.n - 1)  # padded ids cannot appear; safety clamp
+
+
+def coarsen_once(g: Graph, match: np.ndarray):
+    """Build the coarse graph from a matching.
+
+    Returns (coarse_graph, cmap) with cmap[v_fine] = v_coarse.
+    """
+    rep = np.minimum(np.arange(g.n), match)
+    reps = np.unique(rep)
+    cmap_tbl = -np.ones(g.n, dtype=np.int64)
+    cmap_tbl[reps] = np.arange(len(reps))
+    cmap = cmap_tbl[rep]
+    nc = len(reps)
+    cvwgt = np.zeros(nc, dtype=np.int64)
+    np.add.at(cvwgt, cmap, g.vwgt)
+    src = np.repeat(np.arange(g.n), g.degrees())
+    cs, cd = cmap[src], cmap[g.adjncy]
+    keep = cs < cd                      # half-edges, drop collapsed
+    cg = Graph.from_edges(nc, np.stack([cs[keep], cd[keep]], 1),
+                          vwgt=cvwgt, ewgt=g.adjwgt[keep])
+    return cg, cmap
+
+
+@dataclasses.dataclass
+class Level:
+    graph: Graph
+    cmap: Optional[np.ndarray]          # fine -> coarse map (None at top)
+    n_instances: int                    # independent fold-dup copies alive
+
+
+@dataclasses.dataclass
+class MultilevelState:
+    levels: List[Level]                 # levels[0] = finest
+
+    @property
+    def coarsest(self) -> Graph:
+        return self.levels[-1].graph
+
+
+def coarsen_multilevel(g: Graph, seed: int, nproc: int = 1,
+                       coarse_target: int = 120, fold_threshold: int = 100,
+                       max_instances: int = 16,
+                       min_reduction: float = 0.97) -> MultilevelState:
+    """Coarsen until ``coarse_target`` vertices, tracking fold-dup instances.
+
+    ``nproc`` is the simulated process count p of the paper; folding starts
+    when n / p_cur < fold_threshold, and every fold doubles the number of
+    independent instances (capped at ``max_instances`` for memory, the
+    paper's own trade-off: "resort to folding only when the number of
+    vertices ... reaches some minimum threshold").
+    """
+    levels = [Level(g, None, 1)]
+    p_cur = max(1, nproc)
+    n_inst = 1
+    lvl_seed = seed
+    while levels[-1].graph.n > coarse_target:
+        cur = levels[-1].graph
+        if p_cur > 1 and cur.n / p_cur < fold_threshold:
+            p_cur = (p_cur + 1) // 2                       # fold ...
+            n_inst = min(n_inst * 2, max_instances)        # ... with dup
+        m = match_graph(cur, lvl_seed)
+        lvl_seed += 1
+        cg, cmap = coarsen_once(cur, m)
+        if cg.n > cur.n * min_reduction:                   # stalled
+            break
+        levels.append(Level(cg, cmap, n_inst))
+    return MultilevelState(levels)

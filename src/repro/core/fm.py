@@ -1,0 +1,221 @@
+"""Vertex-separator FM refinement, multi-sequential (paper §3.3), in JAX.
+
+State per vertex: part ∈ {0, 1, 2=separator, 3=padding}.  Invariant: no edge
+joins part 0 to part 1.  A move takes a separator vertex v to side p; every
+neighbor of v in side 1−p is pulled into the separator (preserving the
+invariant).  Gain = vwgt[v] − Σ pulled weights.  Moves may be negative
+(hill-climbing); the best state seen is restored at end of pass.
+
+The paper's *multi-sequential* refinement — "centralized copies of this band
+graph ... serve to run fully independent instances of our sequential FM
+algorithm; the perturbation of the initial state ... allows us to explore
+slightly different solution spaces" — is here a ``vmap`` over K instances
+whose first ``n_pert`` moves are randomized.  Batching over instances is the
+TPU-native form of the paper's one-instance-per-process scheme.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -jnp.inf
+BIG_NOISE = 1e9
+
+
+def _fm_single(nbr, vwgt, part_init, locked, key, eps_frac, max_moves,
+               n_pert, passes: int, pos_only: bool = False):
+    n, d = nbr.shape
+    valid = nbr >= 0
+    nbrs = jnp.where(valid, nbr, 0)
+    vwgt_f = vwgt.astype(jnp.float32)
+    total = vwgt_f.sum()
+    eps_abs = eps_frac * total
+    vid = jnp.arange(n, dtype=jnp.int32)
+
+    def sums(part):
+        w0 = jnp.sum(vwgt_f * (part == 0))
+        w1 = jnp.sum(vwgt_f * (part == 1))
+        ws = jnp.sum(vwgt_f * (part == 2))
+        return w0, w1, ws
+
+    def pulled_full(part):
+        """pulled_to{0,1}[v] = weight of N(v) in side {1,0} (O(n·d))."""
+        pn = part[nbrs]                                     # (n, d)
+        wn = jnp.where(valid, vwgt_f[nbrs], 0.0)
+        return (jnp.sum(wn * (pn == 1), axis=1),
+                jnp.sum(wn * (pn == 0), axis=1))
+
+    def move_cond(carry):
+        i, alive, *_ = carry
+        return (i < max_moves) & alive
+
+    def move_body(carry):
+        """One FM move.  ``pulled0/1`` are maintained incrementally:
+        selection is O(n) vector ops, the update is O(d²) scatters —
+        (beyond-paper optimization vs the naive O(n·d) gain recompute)."""
+        (i, alive, part, moved, pulled0, pulled1,
+         w0, w1, ws, bpart, bws, bimb) = carry
+        gain0 = vwgt_f - pulled0
+        gain1 = vwgt_f - pulled1
+        # --- feasibility (balance after move)
+        imb = jnp.abs(w0 - w1)
+        imb0 = jnp.abs((w0 + vwgt_f) - (w1 - pulled0))
+        imb1 = jnp.abs((w0 - pulled1) - (w1 + vwgt_f))
+        feas0 = imb0 <= jnp.maximum(eps_abs, imb)
+        feas1 = imb1 <= jnp.maximum(eps_abs, imb)
+        movable = (part == 2) & ~moved & ~locked
+        amp = jnp.where(i < pert, BIG_NOISE, 1e-3)
+        ok0, ok1 = movable & feas0, movable & feas1
+        if pos_only:                    # ParMETIS-style strict improvement
+            ok0, ok1 = ok0 & (gain0 > 0), ok1 & (gain1 > 0)
+        s0 = jnp.where(ok0, gain0 + noise[0] * amp, NEG_INF)
+        s1 = jnp.where(ok1, gain1 + noise[1] * amp, NEG_INF)
+        scores = jnp.concatenate([s0, s1])
+        idx = jnp.argmax(scores)
+        ok = scores[idx] > NEG_INF
+        side = (idx >= n).astype(jnp.int8)
+        v = (idx % n).astype(jnp.int32)
+        # --- apply (masked; no-op when not ok)
+        nv = nbrs[v]                                        # (d,)
+        nvalid = valid[v]
+        pull_slot = nvalid & (part[nv] == (1 - side)) & ok  # pulled set ⊆ N(v)
+        pulled_w = jnp.sum(jnp.where(pull_slot, vwgt_f[nv], 0.0))
+        # part updates
+        tgt_pull = jnp.where(pull_slot, nv, n)
+        part = part.at[tgt_pull].set(jnp.int8(2), mode="drop")
+        part = part.at[v].set(jnp.where(ok, side, part[v]))
+        # pulled0/1 updates from v's side change (v: 2 -> side)
+        tgt_v = jnp.where(nvalid & ok, nv, n)
+        dv_w = vwgt_f[v]
+        pulled0 = pulled0.at[tgt_v].add(
+            jnp.where(side == 1, dv_w, 0.0), mode="drop")
+        pulled1 = pulled1.at[tgt_v].add(
+            jnp.where(side == 0, dv_w, 0.0), mode="drop")
+        # pulled0/1 updates from the pulled set (u: 1-side -> 2)
+        rows = nbrs[nv]                                     # (d, d)
+        rvalid = valid[nv] & pull_slot[:, None]
+        tgt_u = jnp.where(rvalid, rows, n).reshape(-1)
+        amt = jnp.broadcast_to(vwgt_f[nv][:, None], rows.shape)
+        amt = jnp.where(rvalid, amt, 0.0).reshape(-1)
+        pulled0 = pulled0.at[tgt_u].add(
+            jnp.where(side == 0, -amt, 0.0), mode="drop")
+        pulled1 = pulled1.at[tgt_u].add(
+            jnp.where(side == 1, -amt, 0.0), mode="drop")
+        # weights
+        dv = jnp.where(ok, dv_w, 0.0)
+        w0 = w0 + jnp.where(side == 0, dv, 0.0) - jnp.where(side == 1, pulled_w, 0.0)
+        w1 = w1 + jnp.where(side == 1, dv, 0.0) - jnp.where(side == 0, pulled_w, 0.0)
+        ws = ws - dv + pulled_w
+        moved = moved.at[v].set(moved[v] | ok)
+        # --- best-seen tracking (feasible states only)
+        imb_new = jnp.abs(w0 - w1)
+        better = (ws < bws) & (imb_new <= jnp.maximum(eps_abs, bimb))
+        bpart = jnp.where(better, part, bpart)
+        bws = jnp.where(better, ws, bws)
+        bimb = jnp.where(better, jnp.minimum(imb_new, bimb), bimb)
+        return (i + 1, ok, part, moved, pulled0, pulled1,
+                w0, w1, ws, bpart, bws, bimb)
+
+    part = part_init
+    w0, w1, ws = sums(part)
+    bpart, bws, bimb = part, ws, jnp.abs(w0 - w1)
+    pert = n_pert                       # read by move_body at trace time
+    for p in range(passes):
+        moved = jnp.zeros(n, bool)
+        key, sub = jax.random.split(key)
+        # per-pass tiebreak noise (moved-locks make per-move noise redundant)
+        noise = jax.random.uniform(sub, (2, n))
+        pulled0, pulled1 = pulled_full(part)
+        carry = (jnp.int32(0), jnp.bool_(True), part, moved, pulled0,
+                 pulled1, w0, w1, ws, bpart, bws, bimb)
+        carry = jax.lax.while_loop(move_cond, move_body, carry)
+        _, _, part, _, _, _, w0, w1, ws, bpart, bws, bimb = carry
+        part = bpart                                        # revert to best
+        w0, w1, ws = sums(part)
+        pert = jnp.int32(0)                                 # 1st pass only
+    return bpart, bws, bimb
+
+
+@functools.partial(jax.jit, static_argnames=("passes", "pos_only"))
+def fm_refine_batch(nbr, vwgt, parts_init, locked, keys, eps_frac,
+                    max_moves, n_pert, passes: int = 3,
+                    pos_only: bool = False):
+    """vmap of FM over K perturbed instances (multi-sequential refinement)."""
+    fn = functools.partial(_fm_single, passes=passes, pos_only=pos_only)
+    return jax.vmap(fn, in_axes=(None, None, 0, None, 0, None, None, None))(
+        nbr, vwgt, parts_init, locked, keys, eps_frac, max_moves, n_pert)
+
+
+# --------------------------------------------------------------------- #
+# host wrapper
+# --------------------------------------------------------------------- #
+def _pow2(x: int, lo: int = 64) -> int:
+    """Round up to a power of two (jit-cache friendly bucketing)."""
+    v = lo
+    while v < x:
+        v *= 2
+    return v
+
+
+def refine_parts(nbr: np.ndarray, vwgt: np.ndarray, part: np.ndarray,
+                 locked: np.ndarray, seed: int, k_inst: int = 8,
+                 eps_frac: float = 0.1, passes: int = 3,
+                 max_moves: int | None = None, n_pert: int = 8,
+                 parts_init: np.ndarray | None = None,
+                 pos_only: bool = False
+                 ) -> Tuple[np.ndarray, float, float]:
+    """Run K FM instances on an ELL graph; return the best part vector.
+
+    Selection is the paper's: best refined band separator wins —
+    min separator weight among balance-feasible instances.
+    ``parts_init`` optionally provides a distinct initial state per instance
+    (K, n) — used by the initial-partition phase.
+    """
+    n, d = nbr.shape
+    n_pad, d_pad = _pow2(n), _pow2(d, 8)
+    k_inst = _pow2(k_inst, 2)
+    nbr_p = -np.ones((n_pad, d_pad), np.int32)
+    nbr_p[:n, :d] = nbr
+    vw_p = np.zeros(n_pad, np.int32)
+    vw_p[:n] = vwgt
+    lock_p = np.ones(n_pad, bool)
+    lock_p[:n] = locked
+    if parts_init is None:
+        parts_init = np.broadcast_to(part[None, :], (k_inst, n))
+        sep_sz = int((part == 2).sum())
+    else:
+        parts_init = np.asarray(parts_init)[
+            np.arange(k_inst) % len(parts_init)]
+        sep_sz = int((parts_init == 2).sum(1).max())
+    if max_moves is None:
+        max_moves = 2 * sep_sz + 16
+    max_moves = min(int(max_moves), n_pad, 4096)
+    parts0 = np.full((k_inst, n_pad), 3, np.int8)
+    parts0[:, :n] = parts_init
+    keys = jax.random.split(jax.random.PRNGKey(seed), k_inst)
+    parts, sep_w, imb = fm_refine_batch(
+        jnp.asarray(nbr_p), jnp.asarray(vw_p), jnp.asarray(parts0),
+        jnp.asarray(lock_p), keys, float(eps_frac),
+        jnp.int32(max_moves), jnp.int32(n_pert), passes=passes,
+        pos_only=pos_only)
+    parts = np.asarray(parts)[:, :n]
+    sep_w = np.asarray(sep_w)
+    imb = np.asarray(imb)
+    total = float(vwgt.sum())
+    feas = imb <= max(eps_frac * total, float(imb.min()))
+    score = np.where(feas, sep_w, sep_w + total)            # infeasible last
+    best = int(np.argmin(score))
+    return parts[best], float(sep_w[best]), float(imb[best])
+
+
+def separator_is_valid(nbr: np.ndarray, part: np.ndarray) -> bool:
+    """No edge joins part 0 and part 1."""
+    valid = nbr >= 0
+    pn = np.where(valid, part[np.where(valid, nbr, 0)], 3)
+    p = part[:, None]
+    bad = ((p == 0) & (pn == 1)) | ((p == 1) & (pn == 0))
+    return not bool(bad.any())

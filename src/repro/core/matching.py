@@ -1,0 +1,93 @@
+"""Synchronous probabilistic heavy-edge matching (paper §3.2), in JAX.
+
+The paper's request/grant protocol maps one-to-one onto data-parallel rounds:
+
+  * every unmatched vertex picks a mating candidate among its unmatched
+    neighbors, "randomly chosen among vertices linked by edges of heaviest
+    weight" — here a masked argmax over the ELL row with a random tiebreak;
+  * query buffers are exchanged and feasible matings granted — here a
+    coin flip splits vertices into proposers/acceptors (so grant chains
+    cannot form), and grants are resolved with segment-max reductions;
+  * unsatisfied requests are notified and vertices re-enqueued — here simply
+    the next round's unmatched mask.
+
+"This whole process is repeated until the list is almost empty ... It
+usually converges in 5 iterations" — we run a fixed number of rounds
+(default 8) and leave stragglers unmatched (singletons), exactly the
+paper's almost-empty stopping rule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+@functools.partial(jax.jit, static_argnames=("rounds",))
+def heavy_edge_matching(nbr: jax.Array, wgt: jax.Array, key: jax.Array,
+                        rounds: int = 8) -> jax.Array:
+    """Compute a matching on an ELL graph.
+
+    Args:
+      nbr:  (n, dmax) int32 neighbor ids, -1 padding.
+      wgt:  (n, dmax) int32 edge weights (0 on padding).
+      key:  PRNG key.
+      rounds: number of synchronous propose/grant rounds.
+
+    Returns:
+      match: (n,) int32 with match[v] = mate of v (== v for singletons).
+    """
+    n, dmax = nbr.shape
+    valid = nbr >= 0
+    nbr_safe = jnp.where(valid, nbr, 0)
+    vid = jnp.arange(n, dtype=jnp.int32)
+
+    def round_fn(carry, rkey):
+        match = carry
+        unmatched = match < 0
+        k_coin, k_tie, k_grant = jax.random.split(rkey, 3)
+        # coin flip: proposers vs acceptors (breaks grant chains)
+        is_prop = jax.random.bernoulli(k_coin, 0.5, (n,)) & unmatched
+        is_acc = (~is_prop) & unmatched
+
+        # --- propose: heaviest unmatched acceptor neighbor, random tiebreak
+        nbr_ok = valid & is_acc[nbr_safe]
+        tie = jax.random.uniform(k_tie, (n, dmax))
+        score = jnp.where(nbr_ok, wgt.astype(jnp.float32) + tie, -jnp.inf)
+        best_slot = jnp.argmax(score, axis=1)
+        has_cand = jnp.any(nbr_ok, axis=1)
+        prop = jnp.where(is_prop & has_cand,
+                         nbr_safe[vid, best_slot], -1)          # (n,)
+        prop_w = jnp.where(prop >= 0, wgt[vid, best_slot], 0)
+
+        # --- grant: acceptor takes heaviest proposal (random tiebreak)
+        gtie = jax.random.uniform(k_grant, (n,))
+        gkey = jnp.where(prop >= 0, prop_w.astype(jnp.float32) + gtie, -jnp.inf)
+        seg = jnp.where(prop >= 0, prop, n)                     # dump row
+        best = jax.ops.segment_max(gkey, seg, num_segments=n + 1)[:n]
+        is_best = (prop >= 0) & (gkey >= best[jnp.where(prop >= 0, prop, 0)])
+        # min proposer id among best-key holders (deterministic final tie)
+        winner = jax.ops.segment_min(jnp.where(is_best, vid, INT_MAX),
+                                     seg, num_segments=n + 1)[:n]
+        granted = is_best & (winner[jnp.where(prop >= 0, prop, 0)] == vid)
+
+        # --- commit both directions
+        match = jnp.where(granted, prop, match)
+        tgt = jnp.where(granted, prop, n)
+        match = match.at[tgt].set(jnp.where(granted, vid, -1).astype(match.dtype),
+                                  mode="drop")
+        return match, None
+
+    match0 = jnp.full((n,), -1, dtype=jnp.int32)
+    match, _ = jax.lax.scan(round_fn, match0, jax.random.split(key, rounds))
+    return jnp.where(match < 0, vid, match)                     # singletons
+
+
+def validate_matching(match: np.ndarray) -> bool:
+    """match is an involution: match[match[v]] == v."""
+    match = np.asarray(match)
+    return bool(np.all(match[match] == np.arange(len(match))))

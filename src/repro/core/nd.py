@@ -1,0 +1,194 @@
+"""Parallel nested dissection driver (paper §3.1) + separator pipeline (§3.2–3.3).
+
+Control plane: host recursion with fold bookkeeping (process counts halve at
+every dissection level, as in the paper's fold of induced subgraphs onto
+⌈p/2⌉ / ⌊p/2⌋ processes).  Data plane: JAX matching / BFS / FM kernels.
+
+``nproc`` only drives the *quality-relevant* parallel mechanisms — fold-dup
+instance counts and the number of multi-sequential FM/initial-partition
+instances — exactly the knobs through which process count affects ordering
+quality in the paper (its Tables 2–3 vary nothing else).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.band import extract_band, project_band
+from repro.core.coarsen import coarsen_multilevel
+from repro.core.fm import refine_parts, separator_is_valid
+from repro.core.graph import Graph
+from repro.core.initsep import initial_separator
+from repro.core.ordering import Ordering
+from repro.sparse.mindeg import min_degree
+
+
+@dataclasses.dataclass
+class NDConfig:
+    leaf_size: int = 96             # switch to minimum degree below this
+    coarse_target: int = 120        # coarsest-graph size
+    fold_threshold: int = 100       # vertices/process before fold-dup (paper)
+    band_width: int = 3             # paper's principled default
+    eps_frac: float = 0.12          # balance tolerance
+    k_fm_cap: int = 16              # max multi-sequential FM instances
+    k_init: int = 8                 # initial-partition tries (per instance)
+    fm_passes: int = 3
+    use_band: bool = True           # ablation switch (§3.3)
+    fold_dup: bool = True           # ablation switch (§3.2)
+    seq_threshold: int = 0          # below this n, pretend nproc=1
+    # --- ParMETIS-like baseline knobs (paper §3.3's description of [20]) ---
+    refine_strict: bool = False     # only strictly-improving moves
+    freeze_interface: bool = False  # vertices with remote neighbors frozen
+
+
+def _project(part_coarse: np.ndarray, cmap: np.ndarray) -> np.ndarray:
+    """Separator projection: coarse separator vertex -> both fine children."""
+    return part_coarse[cmap].astype(np.int8)
+
+
+def compute_separator(g: Graph, seed: int, nproc: int, cfg: NDConfig
+                      ) -> Optional[np.ndarray]:
+    """Multilevel + band-FM vertex separator of g.  Returns part or None."""
+    if g.n < 4:
+        return None
+    state = coarsen_multilevel(
+        g, seed, nproc=nproc if cfg.fold_dup else 1,
+        coarse_target=cfg.coarse_target, fold_threshold=cfg.fold_threshold,
+        max_instances=cfg.k_fm_cap)
+    coarsest = state.coarsest
+    n_inst = state.levels[-1].n_instances
+    k_init = min(cfg.k_init * n_inst, 32)
+    part, _ = initial_separator(coarsest, seed, k_tries=k_init,
+                                eps_frac=cfg.eps_frac)
+    if cfg.refine_strict:
+        k_fm = 1
+    else:
+        k_fm = int(np.clip(nproc, 1, cfg.k_fm_cap)) if cfg.fold_dup else 1
+        k_fm = max(k_fm, 2)
+    # uncoarsen: project, band-extract, multi-sequential FM
+    for lvl in range(len(state.levels) - 1, 0, -1):
+        cmap = state.levels[lvl].cmap
+        fine = state.levels[lvl - 1].graph
+        part = _project(part, cmap)
+        part = _refine_level(fine, part, seed * 101 + lvl, k_fm, nproc, cfg)
+    return part
+
+
+def _interface_frozen(g: Graph, nproc: int) -> np.ndarray:
+    """Vertices with neighbors on another process of a block distribution.
+
+    Models the parallel-FM communication constraint the paper attributes to
+    ParMETIS [20]: a move whose gain update would need remote coordination
+    is not attempted.
+    """
+    blk = (np.arange(g.n, dtype=np.int64) * nproc) // max(g.n, 1)
+    src = np.repeat(np.arange(g.n), g.degrees())
+    remote = blk[src] != blk[g.adjncy]
+    frozen = np.zeros(g.n, bool)
+    frozen[np.unique(src[remote])] = True
+    return frozen
+
+
+def _refine_level(fine: Graph, part: np.ndarray, seed: int, k_fm: int,
+                  nproc: int, cfg: NDConfig) -> np.ndarray:
+    pos_only = cfg.refine_strict
+    n_pert = 0 if pos_only else 8
+    if cfg.use_band:
+        band, bpart, locked, old_ids = extract_band(fine, part,
+                                                    width=cfg.band_width)
+        nbr, _ = band.to_ell()
+        bpart, _, _ = refine_parts(nbr, band.vwgt, bpart, locked, seed,
+                                   k_inst=k_fm, eps_frac=cfg.eps_frac,
+                                   passes=cfg.fm_passes, n_pert=n_pert,
+                                   pos_only=pos_only)
+        assert separator_is_valid(nbr, bpart)
+        return project_band(part, bpart, old_ids)
+    locked = np.zeros(fine.n, bool)
+    if cfg.freeze_interface and nproc > 1:
+        locked |= _interface_frozen(fine, nproc)
+    nbr, _ = fine.to_ell()
+    out, _, _ = refine_parts(nbr, fine.vwgt, part, locked, seed,
+                             k_inst=k_fm, eps_frac=cfg.eps_frac,
+                             passes=cfg.fm_passes, n_pert=n_pert,
+                             pos_only=pos_only)
+    assert separator_is_valid(nbr, out)
+    return out
+
+
+def _fallback_separator(g: Graph, seed: int) -> Optional[np.ndarray]:
+    from repro.core.mapping import edge_bisect
+    half = edge_bisect(g, seed=seed, k_tries=2, passes=2)
+    part = half.astype(np.int8)
+    src = np.repeat(np.arange(g.n), g.degrees())
+    touch = (part[src] == 0) & (part[g.adjncy] == 1)
+    part[np.unique(g.adjncy[touch])] = 2
+    return part
+
+
+def nested_dissection(g: Graph, seed: int = 0, nproc: int = 1,
+                      cfg: Optional[NDConfig] = None) -> np.ndarray:
+    """Full ordering.  Returns perm (perm[k] = vertex eliminated k-th)."""
+    from repro.util import enable_compile_cache
+    enable_compile_cache()
+    cfg = cfg or NDConfig()
+    ordering = Ordering(g.n)
+    _nd_rec(g, np.arange(g.n, dtype=np.int64), seed, nproc, cfg,
+            ordering, ordering.root, 0)
+    perm = ordering.assemble()
+    assert np.array_equal(np.sort(perm), np.arange(g.n)), "not a permutation"
+    return perm
+
+
+def _nd_rec(g: Graph, gids: np.ndarray, seed: int, nproc: int, cfg: NDConfig,
+            ordering: Ordering, node, start: int) -> None:
+    n = g.n
+    if n <= cfg.leaf_size:
+        perm = min_degree(g, tie_seed=seed)
+        ordering.add_leaf(node, start, gids[perm])
+        return
+    comp = g.components()
+    ncomp = int(comp.max()) + 1
+    if ncomp > 1:                       # independent parts: no separator
+        off = start
+        for c in range(ncomp):
+            sub, old = g.induced_subgraph(comp == c)
+            child = ordering.add_internal(node, off, sub.n)
+            _nd_rec(sub, gids[old], seed * 7 + c, nproc, cfg, ordering,
+                    child, off)
+            off += sub.n
+        return
+    eff_proc = 1 if n <= cfg.seq_threshold else nproc
+    part = compute_separator(g, seed, eff_proc, cfg)
+    if part is None or min((part == 0).sum(), (part == 1).sum()) == 0:
+        if n > 4 * cfg.leaf_size:
+            # separator heuristic failed on a big subgraph: fall back to a
+            # balanced edge bisection (boundary -> separator) rather than
+            # handing O(n) vertices to sequential minimum degree.
+            part = _fallback_separator(g, seed)
+        if part is None or min((part == 0).sum(), (part == 1).sum()) == 0:
+            perm = min_degree(g, tie_seed=seed)     # could not split
+            ordering.add_leaf(node, start, gids[perm])
+            return
+    g0, old0 = g.induced_subgraph(part == 0)
+    g1, old1 = g.induced_subgraph(part == 1)
+    gs, olds = g.induced_subgraph(part == 2)
+    # paper §3.1: part 0 onto ⌈p/2⌉ processes, part 1 onto ⌊p/2⌋
+    p0, p1 = (nproc + 1) // 2, max(nproc // 2, 1)
+    c0 = ordering.add_internal(node, start, g0.n)
+    _nd_rec(g0, gids[old0], seed * 2 + 1, p0, cfg, ordering, c0, start)
+    c1 = ordering.add_internal(node, start + g0.n, g1.n)
+    _nd_rec(g1, gids[old1], seed * 2 + 2, p1, cfg, ordering, c1,
+            start + g0.n)
+    # separator ordered last (highest indices); minimum degree internally
+    # (paper couples ND with MD [10]); very large separators (circuit-like
+    # graphs) would stall the host MD — profile-order them instead.
+    if gs.n <= 2:
+        sperm = np.arange(gs.n, dtype=np.int64)
+    elif gs.n <= 600:
+        sperm = min_degree(gs, tie_seed=seed)
+    else:
+        from repro.core.baselines import rcm
+        sperm = rcm(gs)
+    ordering.add_leaf(node, start + g0.n + g1.n, gids[olds[sperm]], "sep")

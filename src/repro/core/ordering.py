@@ -1,0 +1,62 @@
+"""Distributed ordering structure (paper §2.2).
+
+A tree spreading over the (simulated) processes, whose leaves are fragments
+of the *inverse permutation*: each ND node receives a global start index in
+the inverse permutation array; leaves are filled with original global
+indices of reordered subgraph vertices; assembly by ascending start index
+yields the complete inverse permutation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class OrderNode:
+    start: int                      # global start index of this sub-ordering
+    size: int
+    kind: str                       # "nd" | "leaf" | "sep"
+    children: List["OrderNode"] = dataclasses.field(default_factory=list)
+    fragment: Optional[np.ndarray] = None   # leaf: original ids, local order
+
+
+class Ordering:
+    def __init__(self, n: int):
+        self.n = n
+        self.root = OrderNode(0, n, "nd")
+        self._frags: List[OrderNode] = []
+
+    def add_leaf(self, parent: OrderNode, start: int, original_ids: np.ndarray,
+                 kind: str = "leaf") -> OrderNode:
+        node = OrderNode(start, len(original_ids), kind, fragment=original_ids)
+        parent.children.append(node)
+        self._frags.append(node)
+        return node
+
+    def add_internal(self, parent: OrderNode, start: int, size: int
+                     ) -> OrderNode:
+        node = OrderNode(start, size, "nd")
+        parent.children.append(node)
+        return node
+
+    def assemble(self) -> np.ndarray:
+        """Concatenate fragments by ascending start index -> perm.
+
+        perm[k] = original vertex eliminated k-th (inverse permutation in the
+        paper's sense: fragment content is original global indices).
+        """
+        perm = np.empty(self.n, dtype=np.int64)
+        seen = 0
+        for node in sorted(self._frags, key=lambda f: f.start):
+            perm[node.start:node.start + node.size] = node.fragment
+            seen += node.size
+        assert seen == self.n, f"fragments cover {seen} of {self.n}"
+        return perm
+
+    def depth(self) -> int:
+        def d(node):
+            return 1 + max((d(c) for c in node.children), default=0)
+        return d(self.root)

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: fused banded-diffusion smoothing step.
+
+Implements one step of the parallelizable diffusion scheme the paper points
+to as the scalable replacement for sequential FM (its ref [28], Pellegrini,
+Euro-Par 2007): two "liquids" are injected at the side anchors (+σ at side
+0, −σ at side 1), diffuse along edges, and evaporate; the sign of the
+steady-state marks the parts and the near-zero belt the separator.
+
+One step is
+    y = x + dt · (Σ_j w_ij·x_j − deg_i·x_i) − dt·μ·sign(x)   (evaporation)
+        + injection at anchors,
+fused into a single VMEM pass over the ELL tiles (SpMV + AXPY + clamp),
+instead of three HBM round-trips — the TPU adaptation of a kernel a GPU
+code would write as CSR SpMV + two elementwise passes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _diffusion_kernel(nbr_ref, val_ref, x_ref, inj_ref, y_ref, *, dt, mu):
+    nbr = nbr_ref[...]
+    val = val_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    inj = inj_ref[...].astype(jnp.float32)     # (bn,) per-vertex injection
+    mask = nbr >= 0
+    idx = jnp.where(mask, nbr, 0)
+    xv = jnp.take(x, idx.reshape(-1), axis=0).reshape(nbr.shape)
+    wv = jnp.where(mask, val, 0.0)
+    flow = jnp.sum(wv * xv, axis=1)
+    deg = jnp.sum(wv, axis=1)
+    i0 = pl.program_id(0) * y_ref.shape[0]
+    xi = jax.lax.dynamic_slice(x, (i0,), (y_ref.shape[0],))
+    y = xi + dt * (flow - deg * xi) - dt * mu * jnp.sign(xi) + inj
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("dt", "mu", "block_rows", "interpret"))
+def diffusion_step(nbr: jax.Array, val: jax.Array, x: jax.Array,
+                   inj: jax.Array, dt: float = 0.25, mu: float = 0.1,
+                   block_rows: int = 256, interpret: bool = True
+                   ) -> jax.Array:
+    """One fused diffusion step on the ELL graph (shapes as ell_spmv)."""
+    n, d = nbr.shape
+    assert n % block_rows == 0
+    grid = (n // block_rows,)
+    kern = functools.partial(_diffusion_kernel, dt=dt, mu=mu)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),                # x resident
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(nbr, val, x, inj)

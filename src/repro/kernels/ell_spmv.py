@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: ELL sparse matrix–vector product.
+
+The compute hot-spot of the diffusion-based separator smoother (paper §4 /
+ref [28]) and of spectral-style partitioning is repeated SpMV over the
+band/graph adjacency.  GPU implementations use CSR + warp-per-row; the
+TPU-native formulation is ELL (rectangular (n, dmax) neighbor/weight tiles,
+−1 padding) so rows map onto the 8×128 VPU lanes without pointer chasing.
+
+Tiling: the row dimension is split into ``block_rows`` tiles; the dense
+vector ``x`` is kept whole in VMEM (band graphs are O(n^{2/3}) of the
+problem, a few hundred KiB — far below the ~16 MiB VMEM budget; this is a
+deliberate adaptation: HBM→VMEM streaming of the ELL tiles dominates, and
+keeping x resident turns the gather into a VMEM-local operation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(nbr_ref, val_ref, x_ref, y_ref):
+    nbr = nbr_ref[...]                        # (bn, d) int32
+    val = val_ref[...]                        # (bn, d)
+    x = x_ref[...]                            # (n,)   resident vector
+    mask = nbr >= 0
+    idx = jnp.where(mask, nbr, 0)
+    xv = jnp.take(x, idx.reshape(-1), axis=0).reshape(nbr.shape)
+    acc = jnp.sum(jnp.where(mask, val * xv, 0).astype(jnp.float32), axis=1)
+    y_ref[...] = acc.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def ell_spmv(nbr: jax.Array, val: jax.Array, x: jax.Array,
+             block_rows: int = 256, interpret: bool = True) -> jax.Array:
+    """y[i] = Σ_j val[i,j] * x[nbr[i,j]] over valid (nbr >= 0) slots.
+
+    Args:
+      nbr: (n, d) int32 ELL neighbor ids (-1 = padding).
+      val: (n, d) edge weights.
+      x:   (n,) dense vector.
+      block_rows: rows per VMEM tile (multiple of 8 for TPU sublanes).
+      interpret: run the kernel body in Python (CPU validation mode).
+    """
+    n, d = nbr.shape
+    assert n % block_rows == 0, "caller pads rows to a block multiple"
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),   # ELL ids tile
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),   # ELL val tile
+            pl.BlockSpec((n,), lambda i: (0,)),                # x resident
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(nbr, val, x)

@@ -1,0 +1,59 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to block multiples and backend selection: ``interpret=True``
+(Python execution of the kernel body) on CPU hosts, compiled Mosaic on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.diffusion import diffusion_step
+from repro.kernels.ell_spmv import ell_spmv
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(a: np.ndarray | jax.Array, block: int, fill):
+    n = a.shape[0]
+    pad = (-n) % block
+    if pad == 0:
+        return a, n
+    widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, widths, constant_values=fill), n
+
+
+def spmv(nbr, val, x, block_rows: int = 256, interpret: bool | None = None):
+    """ELL SpMV with automatic padding; returns (n,) like x."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = x.shape[0]
+    nbr_p, _ = _pad_rows(jnp.asarray(nbr, jnp.int32), block_rows, -1)
+    val_p, _ = _pad_rows(jnp.asarray(val), block_rows, 0)
+    # x stays unpadded except to match row padding (gather targets < n)
+    x_p, _ = _pad_rows(jnp.asarray(x), block_rows, 0)
+    y = ell_spmv(nbr_p, val_p, x_p, block_rows=block_rows,
+                 interpret=interpret)
+    return y[:n]
+
+
+def diffuse(nbr, val, x, inj, steps: int = 1, dt: float = 0.25,
+            mu: float = 0.1, block_rows: int = 256,
+            interpret: bool | None = None):
+    """Run ``steps`` fused diffusion steps; returns final x."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = x.shape[0]
+    nbr_p, _ = _pad_rows(jnp.asarray(nbr, jnp.int32), block_rows, -1)
+    val_p, _ = _pad_rows(jnp.asarray(val), block_rows, 0)
+    x_p, _ = _pad_rows(jnp.asarray(x), block_rows, 0)
+    inj_p, _ = _pad_rows(jnp.asarray(inj), block_rows, 0)
+    for _ in range(steps):
+        x_p = diffusion_step(nbr_p, val_p, x_p, inj_p, dt=dt, mu=mu,
+                             block_rows=block_rows, interpret=interpret)
+    return x_p[:n]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ell_spmv_ref(nbr: jax.Array, val: jax.Array, x: jax.Array) -> jax.Array:
+    mask = nbr >= 0
+    idx = jnp.where(mask, nbr, 0)
+    xv = x[idx]
+    acc = jnp.sum(jnp.where(mask, val * xv, 0).astype(jnp.float32), axis=1)
+    return acc.astype(x.dtype)
+
+
+def diffusion_step_ref(nbr: jax.Array, val: jax.Array, x: jax.Array,
+                       inj: jax.Array, dt: float = 0.25,
+                       mu: float = 0.1) -> jax.Array:
+    mask = nbr >= 0
+    idx = jnp.where(mask, nbr, 0)
+    xf = x.astype(jnp.float32)
+    wv = jnp.where(mask, val.astype(jnp.float32), 0.0)
+    flow = jnp.sum(wv * xf[idx], axis=1)
+    deg = jnp.sum(wv, axis=1)
+    y = (xf + dt * (flow - deg * xf) - dt * mu * jnp.sign(xf)
+         + inj.astype(jnp.float32))
+    return y.astype(x.dtype)

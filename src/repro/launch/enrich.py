@@ -1,0 +1,44 @@
+"""Post-process dryrun_report.json: add analytic compute terms.
+
+    PYTHONPATH=src python -m repro.launch.enrich dryrun_report.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.configs.base import get_config
+from repro.flopcount import cell_flops
+from repro.roofline import PEAK_FLOPS
+
+
+def enrich(records):
+    for r in records:
+        if r["status"] != "OK":
+            continue
+        cfg = get_config(r["arch"])
+        n_dev = r["n_devices"]
+        fl = cell_flops(cfg, r["shape"])
+        r["analytic_flops_global"] = fl
+        r["roofline"]["t_compute_analytic_s"] = fl / n_dev / PEAK_FLOPS
+        r["useful_flops_ratio_analytic"] = r["model_flops_global"] / fl
+        # bottleneck using the analytic compute term
+        f = r["roofline"]
+        terms = {"compute": f["t_compute_analytic_s"],
+                 "memory": f["t_memory_s"],
+                 "collective": f["t_collective_s"]}
+        f["bottleneck_analytic"] = max(terms, key=terms.get)
+        f["roofline_fraction"] = (f["t_compute_analytic_s"]
+                                  / max(sum(terms.values()), 1e-12))
+    return records
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_report.json"
+    records = json.load(open(path))
+    json.dump(enrich(records), open(path, "w"), indent=1)
+    print(f"enriched {sum(r['status'] == 'OK' for r in records)} OK records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration runner: lower one cell under knob variants, print the
+three roofline terms per variant (EXPERIMENTS.md §Perf Track B).
+
+  python -m repro.launch.hillclimb --arch deepseek-v2-lite-16b \
+      --shape train_4k --variants base,nosp,dots,nozero1,fsdp,moeshard
+"""
+import argparse
+import json
+import time
+
+from repro.configs.base import get_config, SHAPES
+from repro.flopcount import cell_flops
+from repro.roofline import PEAK_FLOPS, analyze_compiled
+
+VARIANTS = {
+    "base":     dict(),
+    "nosp":     dict(seq_shard=False),
+    "dots":     dict(remat="dots"),
+    "nozero1":  dict(zero1=False),
+    "fsdp":     dict(fsdp=True),
+    "fsdp_dots": dict(fsdp=True, remat="dots"),
+    "moeshard": dict(moe_shard=True),
+    "moeshard_nosp": dict(moe_shard=True, seq_shard=False),
+}
+
+
+def run_variant(arch, shape, multi_pod, name, knobs):
+    from repro.launch import dryrun as D
+    from repro.models import layers as Lmod
+    moe_shard = knobs.pop("moe_shard", False)
+    Lmod.MOE_SHARD_DISPATCH = moe_shard
+    t0 = time.time()
+    try:
+        _, compiled, _ = D.lower_cell_cfg(get_config(arch), shape,
+                                          multi_pod, **knobs)
+        r = analyze_compiled(compiled)
+        extr = D.depth_extrapolated_costs(arch, shape, multi_pod,
+                                          knobs.get("seq_shard", True),
+                                          knobs.get("zero1", True),
+                                          knobs.get("remat", "full"),
+                                          knobs.get("fsdp", False))
+        r.bytes_per_chip = max(extr["bytes_per_chip"], r.bytes_per_chip)
+        r.coll_bytes_per_chip = max(extr["coll_bytes_per_chip"],
+                                    r.coll_bytes_per_chip)
+        cfg = get_config(arch)
+        n_dev = 512 if multi_pod else 256
+        remat = knobs.get("remat", "full")
+        tc = cell_flops(cfg, shape, remat=remat) / n_dev / PEAK_FLOPS
+        mem = compiled.memory_analysis()
+        peak = (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 2**30
+        out = {
+            "variant": name, "t_compute": round(tc, 3),
+            "t_memory": round(r.t_memory, 3),
+            "t_collective": round(r.t_collective, 3),
+            "bound": round(max(tc, r.t_memory, r.t_collective), 3),
+            "peak_gib": round(peak, 1),
+            "coll_detail": {k: f"{v:.2e}" for k, v in
+                            sorted(r.coll_detail.items())},
+            "compile_s": round(time.time() - t0, 1),
+        }
+    finally:
+        Lmod.MOE_SHARD_DISPATCH = False
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--variants", default="base")
+    args = ap.parse_args()
+    for name in args.variants.split(","):
+        knobs = dict(VARIANTS[name])
+        try:
+            out = run_variant(args.arch, args.shape, args.multi, name, knobs)
+        except Exception as e:  # noqa: BLE001
+            out = {"variant": name, "error": f"{type(e).__name__}: {e}"[:300]}
+        print(json.dumps(out), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) dry-run cell.
+
+No device allocation: everything here is shape metadata, the same pattern a
+launcher uses to lower programs before the job lands on real chips.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SHAPES
+from repro.models import lm
+from repro.optim import adamw
+
+SDS = jax.ShapeDtypeStruct
+PyTree = Any
+
+
+def batch_specs_for(cfg: ArchConfig, shape_name: str) -> Dict[str, SDS]:
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    if kind == "decode":
+        batch = {"tokens": SDS((B, 1), jnp.int32)}
+    else:
+        batch = {"tokens": SDS((B, S), jnp.int32)}
+        if kind == "train":
+            batch["labels"] = SDS((B, S), jnp.int32)
+    if cfg.enc_dec and kind != "decode":
+        batch["frames"] = SDS((B, cfg.enc_len, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "patches" and kind != "decode":
+        batch["patches"] = SDS((B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def param_structs(cfg: ArchConfig) -> PyTree:
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: lm.init_params(k, cfg), key)
+
+
+def opt_structs(params: PyTree) -> PyTree:
+    return jax.eval_shape(adamw.init, params)
+
+
+def cache_structs(cfg: ArchConfig, B: int, S_max: int) -> PyTree:
+    return jax.eval_shape(lambda: lm.init_caches(cfg, B, S_max))
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> Dict[str, PyTree]:
+    """Everything the step function of this cell consumes."""
+    sh = SHAPES[shape_name]
+    out: Dict[str, PyTree] = {
+        "params": param_structs(cfg),
+        "batch": batch_specs_for(cfg, shape_name),
+    }
+    if sh["kind"] == "train":
+        out["opt"] = opt_structs(out["params"])
+    if sh["kind"] == "decode":
+        out["caches"] = cache_structs(cfg, sh["global_batch"], sh["seq_len"])
+        out["pos"] = SDS((), jnp.int32)
+    return out

@@ -1,0 +1,325 @@
+"""Model layer zoo: RMSNorm, RoPE, GQA/MLA attention, SwiGLU, MoE.
+
+Conventions:
+  * parameters are nested dicts of jnp arrays (bf16), built by ``*_init``;
+  * ``*_apply`` are pure functions; full-sequence (train/prefill) and
+    single-token (decode, with KV cache) paths are separate functions;
+  * attention is query-chunked (flash-style memory bound: the (B,H,Cq,S)
+    score block is the only quadratic temp, recomputed under remat);
+  * MoE uses sort-based dispatch to static-capacity expert batches
+    (TPU-friendly static shapes; all-to-all inserted by SPMD partitioner).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+PyTree = Any
+PDT = jnp.bfloat16           # parameter/compute dtype
+
+#: perf knob (§Perf B): when set (a NamedSharding for (E, C, d)), the MoE
+#: dispatch/combine tensors are constrained to it — sharding capacity over
+#: the data axes turns the token gather into an all-to-all instead of a
+#: full activation all-gather.  Configured by launch/dryrun.lower_cell_cfg.
+MOE_SHARD_DISPATCH = False
+MOE_DISPATCH_SPEC = None
+
+
+def _dense(key, shape, scale=None):
+    scale = scale or (1.0 / jnp.sqrt(shape[0]))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(PDT)
+
+
+# ------------------------------------------------------------------ #
+# norms / rope
+# ------------------------------------------------------------------ #
+def rmsnorm_init(d: int) -> PyTree:
+    return {"scale": jnp.ones((d,), PDT)}
+
+
+def rmsnorm(p: PyTree, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["scale"]
+
+
+def rope_tables(positions: jax.Array, hd: int, theta: float
+                ) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin tables (..., hd/2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, hd); cos/sin (..., S, hd/2) broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c, s = cos[..., None, :], sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ #
+# chunked softmax attention core
+# ------------------------------------------------------------------ #
+def _attend(q, k, v, *, causal: bool, q_pos0=0, kv_len: Optional[jax.Array]
+            = None, q_chunk: int = 1024) -> jax.Array:
+    """q (B,Sq,H,hd), k/v (B,Sk,Hkv,hd) -> (B,Sq,H,hd).
+
+    Query-chunked; group-broadcast for GQA; f32 softmax.  ``kv_len`` masks a
+    cache filled only up to that length (decode).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = H // Hkv
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    kpos = jnp.arange(Sk)
+
+    def one_chunk(qc, qc_pos):
+        # qc (B,Cq,H,hd) -> scores (B,Hkv,g,Cq,Sk) in f32
+        qg = qc.reshape(B, qc.shape[1], Hkv, g, hd)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        mask = jnp.ones((qc.shape[1], Sk), bool)
+        if causal:
+            mask &= qc_pos[:, None] >= kpos[None, :]
+        if kv_len is not None:
+            mask &= kpos[None, :] < kv_len
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+        return o.reshape(B, qc.shape[1], H, dv).astype(q.dtype)
+
+    if Sq <= q_chunk:
+        return one_chunk(q, q_pos0 + jnp.arange(Sq))
+
+    pad = (-Sq) % q_chunk                 # ragged tail (e.g. enc_len 1500)
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (Sq + pad) // q_chunk
+    # python-unrolled chunk loop (not lax.scan): keeps XLA cost_analysis
+    # honest (scan bodies are counted once) and lets the scheduler overlap
+    # chunks; each chunk is remat'd so backward memory stays one chunk.
+    chunk_fn = jax.checkpoint(one_chunk)
+    outs = []
+    for i in range(n_chunks):
+        qc = jax.lax.slice_in_dim(q, i * q_chunk, (i + 1) * q_chunk, axis=1)
+        outs.append(chunk_fn(qc, q_pos0 + i * q_chunk + jnp.arange(q_chunk)))
+    return jnp.concatenate(outs, axis=1)[:, :Sq]
+
+
+# ------------------------------------------------------------------ #
+# GQA attention
+# ------------------------------------------------------------------ #
+def attn_init(key, cfg: ArchConfig) -> PyTree:
+    d, hd, H, Hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense(ks[0], (d, H * hd)),
+        "wk": _dense(ks[1], (d, Hkv * hd)),
+        "wv": _dense(ks[2], (d, Hkv * hd)),
+        "wo": _dense(ks[3], (H * hd, d)),
+    }
+
+
+def attn_qkv(p, x, cfg: ArchConfig, pos0=0):
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, hd)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, hd)
+    pos = pos0 + jnp.arange(S)
+    cos, sin = rope_tables(pos, hd, cfg.rope_theta)
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin), v
+
+
+def attn_apply(p, x, cfg: ArchConfig, *, causal=True, return_kv=False):
+    """Full-sequence attention (train / prefill)."""
+    q, k, v = attn_qkv(p, x, cfg)
+    o = _attend(q, k, v, causal=causal)
+    y = o.reshape(*x.shape[:2], -1) @ p["wo"]
+    return (y, (k, v)) if return_kv else y
+
+
+def attn_decode(p, x, cache_k, cache_v, pos, cfg: ArchConfig):
+    """One-token decode. cache_{k,v}: (B, S_max, Hkv, hd); pos (,) int."""
+    B = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, 1, H, hd)
+    k = (x @ p["wk"]).reshape(B, 1, Hkv, hd)
+    v = (x @ p["wv"]).reshape(B, 1, Hkv, hd)
+    cos, sin = rope_tables(pos[None], hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, pos, axis=1)
+    o = _attend(q, cache_k, cache_v, causal=False, kv_len=pos + 1)
+    y = o.reshape(B, 1, H * hd) @ p["wo"]
+    return y, cache_k, cache_v
+
+
+def cross_attn_apply(p, x, kv_src, cfg: ArchConfig):
+    """Encoder–decoder cross attention (no cache update, no causal mask)."""
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (kv_src @ p["wk"]).reshape(B, kv_src.shape[1], Hkv, hd)
+    v = (kv_src @ p["wv"]).reshape(B, kv_src.shape[1], Hkv, hd)
+    o = _attend(q, k, v, causal=False)
+    return o.reshape(B, S, H * hd) @ p["wo"]
+
+
+# ------------------------------------------------------------------ #
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ------------------------------------------------------------------ #
+def mla_init(key, cfg: ArchConfig) -> PyTree:
+    d, hd, H = cfg.d_model, cfg.hd, cfg.n_heads
+    r, c = cfg.rope_head_dim, cfg.kv_lora
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": _dense(ks[0], (d, H * (hd + r))),      # q: nope + rope parts
+        "wdkv": _dense(ks[1], (d, c)),               # down-proj (cached)
+        "wkr": _dense(ks[2], (d, r)),                # shared rope key
+        "wuk": _dense(ks[3], (c, H * hd)),           # up-proj keys
+        "wuv": _dense(ks[4], (c, H * hd)),           # up-proj values
+        "wo": _dense(ks[5], (H * hd, d)),
+    }
+
+
+def mla_apply(p, x, cfg: ArchConfig):
+    """Full-sequence MLA (train/prefill): expand latents to per-head k/v."""
+    B, S, d = x.shape
+    H, hd, r, c = cfg.n_heads, cfg.hd, cfg.rope_head_dim, cfg.kv_lora
+    q = (x @ p["wq"]).reshape(B, S, H, hd + r)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    ckv = x @ p["wdkv"]                              # (B,S,c) latent
+    k_rope = (x @ p["wkr"]).reshape(B, S, 1, r)
+    pos = jnp.arange(S)
+    cos, sin = rope_tables(pos, r, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+    k_nope = (ckv @ p["wuk"]).reshape(B, S, H, hd)
+    v = (ckv @ p["wuv"]).reshape(B, S, H, hd)
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    kf = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, r))], -1)
+    o = _attend(qf, kf, v, causal=True)
+    return o.reshape(B, S, H * hd) @ p["wo"]
+
+
+def mla_decode(p, x, cache_c, cache_kr, pos, cfg: ArchConfig):
+    """One-token MLA decode with weight absorption: the cache holds only the
+    latent (c) and the shared rope key (r) — the paper-configured memory
+    saving (512+64 vs 2·H·hd per token)."""
+    B = x.shape[0]
+    H, hd, r, c = cfg.n_heads, cfg.hd, cfg.rope_head_dim, cfg.kv_lora
+    q = (x @ p["wq"]).reshape(B, 1, H, hd + r)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    cos, sin = rope_tables(pos[None], r, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    ckv_t = x @ p["wdkv"]                            # (B,1,c)
+    kr_t = (x @ p["wkr"]).reshape(B, 1, 1, r)
+    kr_t = apply_rope(kr_t, cos, sin)
+    cache_c = jax.lax.dynamic_update_slice_in_dim(cache_c, ckv_t, pos, axis=1)
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(
+        cache_kr, kr_t[:, :, 0], pos, axis=1)
+    # absorb wuk into q: q_c (B,1,H,c)
+    wuk = p["wuk"].reshape(c, H, hd)
+    q_c = jnp.einsum("bqhd,chd->bqhc", q_nope.astype(jnp.float32),
+                     wuk.astype(jnp.float32))
+    s = jnp.einsum("bqhc,bsc->bhqs", q_c, cache_c.astype(jnp.float32))
+    s += jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                    cache_kr.astype(jnp.float32))
+    s *= 1.0 / jnp.sqrt(hd + r).astype(jnp.float32)
+    mask = jnp.arange(cache_c.shape[1])[None, None, None, :] < pos + 1
+    s = jnp.where(mask, s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhqs,bsc->bqhc", pr, cache_c.astype(jnp.float32))
+    wuv = p["wuv"].reshape(c, H, hd)
+    o = jnp.einsum("bqhc,chd->bqhd", o_c, wuv.astype(jnp.float32))
+    y = o.reshape(B, 1, H * hd).astype(x.dtype) @ p["wo"]
+    return y, cache_c, cache_kr
+
+
+# ------------------------------------------------------------------ #
+# FFN: SwiGLU + MoE
+# ------------------------------------------------------------------ #
+def swiglu_init(key, d: int, f: int) -> PyTree:
+    ks = jax.random.split(key, 3)
+    return {"w1": _dense(ks[0], (d, f)), "w3": _dense(ks[1], (d, f)),
+            "w2": _dense(ks[2], (f, d))}
+
+
+def swiglu_apply(p, x):
+    return (jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]
+
+
+def moe_init(key, cfg: ArchConfig) -> PyTree:
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense(ks[0], (d, E), scale=0.02),
+        "w1": _dense(ks[1], (E, d, f)),
+        "w3": _dense(ks[2], (E, d, f)),
+        "w2": _dense(ks[3], (E, f, d)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = swiglu_init(ks[4], d, f * cfg.n_shared_experts)
+    return p
+
+
+def moe_apply(p, x, cfg: ArchConfig):
+    """Sort-based static-capacity MoE.  x (B,S,d) -> (B,S,d).
+
+    Tokens are flattened, routed top-k, sorted by expert, truncated at
+    capacity C = T·k/E·cf, processed as (E, C, d) einsums against stacked
+    expert weights (EP-shardable on the model axis), and combined back by
+    weighted scatter-add.  Aux load-balancing loss returned as second out.
+    """
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(8, int(T * K / E * cfg.capacity_factor))
+    xt = x.reshape(T, d)
+    logits = (xt @ p["router"]).astype(jnp.float32)          # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                      # (T,K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    flat_e = idx.reshape(-1).astype(jnp.int32)               # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    flat_g = gate.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    pos = jnp.arange(T * K, dtype=jnp.int32) - \
+        jnp.searchsorted(se, se, side="left").astype(jnp.int32)
+    keep = pos < C
+    slot = jnp.where(keep, pos, C)
+    disp = jnp.full((E, C + 1), T, jnp.int32)
+    disp = disp.at[se, slot].set(jnp.where(keep, st, T))[:, :C]
+    gsc = jnp.zeros((E, C + 1), jnp.float32)
+    gsc = gsc.at[se, slot].set(jnp.where(keep, sg, 0.0))[:, :C]
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], 0)
+    xe = xt_pad[disp]                                        # (E,C,d)
+    if MOE_SHARD_DISPATCH and MOE_DISPATCH_SPEC is not None:
+        xe = jax.lax.with_sharding_constraint(xe, MOE_DISPATCH_SPEC)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w1"])) * \
+        jnp.einsum("ecd,edf->ecf", xe, p["w3"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w2"])              # (E,C,d)
+    if MOE_SHARD_DISPATCH and MOE_DISPATCH_SPEC is not None:
+        ye = jax.lax.with_sharding_constraint(ye, MOE_DISPATCH_SPEC)
+    y = jnp.zeros((T + 1, d), jnp.float32)
+    y = y.at[disp.reshape(-1)].add(
+        (ye.astype(jnp.float32) * gsc[..., None]).reshape(-1, d))[:T]
+    y = y.astype(x.dtype).reshape(B, S, d)
+    if cfg.n_shared_experts:
+        y = y + swiglu_apply(p["shared"], x)
+    # GShard aux loss: E * Σ_e (token-frac_e · prob-frac_e)
+    frac_tokens = jnp.mean((jax.nn.one_hot(idx, E)).sum(1), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs) / K
+    return y, aux

@@ -1,0 +1,353 @@
+"""Unified causal LM over per-layer patterns, with enc-dec support.
+
+One model class covers all 10 assigned architectures:
+  * per-layer descriptors (mixer ∈ {attn, mla, ssm}, ffn ∈ {dense, moe,
+    moe+dense, none}) derived from the ArchConfig;
+  * homogeneous runs of layers are stacked and executed with
+    ``lax.scan`` over a (possibly multi-layer) super-block, wrapped in
+    ``jax.checkpoint`` (remat) — compile-time and activation memory stay
+    bounded for 88-layer models;
+  * decode threads per-layer caches through the same scan structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.sharding import NO_SHARD, ShardCfg
+
+PyTree = Any
+
+#: when True, layer groups run as python loops instead of lax.scan.
+#: Used (a) by the dry-run cost extrapolation (XLA cost_analysis counts
+#: scan bodies once) and (b) as a scan-vs-unroll perf ablation knob.
+FORCE_UNROLL = False
+
+#: remat policy for the per-layer checkpoint: "full" recomputes everything
+#: (min memory, max recompute flops); "dots" saves matmul outputs
+#: (≈1/3 less recompute for ~2× activation memory).  Perf-iteration knob.
+REMAT_POLICY = "full"
+
+
+def _remat(fn):
+    if REMAT_POLICY == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _take(tree: PyTree, i: int) -> PyTree:
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+# ------------------------------------------------------------------ #
+# layer descriptors and grouping
+# ------------------------------------------------------------------ #
+def layer_descs(cfg: ArchConfig) -> List[Tuple[str, str]]:
+    descs = []
+    for kind, ffn in zip(cfg.layer_kinds(), cfg.layer_ffn()):
+        mixer = "ssm" if kind == "ssm" else ("mla" if cfg.mla else "attn")
+        if kind == "ssm" and not cfg.moe and cfg.d_ff == 0:
+            ffn = "none"                       # pure mamba block
+        elif ffn == "moe" and cfg.dense_residual:
+            ffn = "moe+dense"
+        descs.append((mixer, ffn))
+    return descs
+
+
+def group_descs(descs: List[Tuple[str, str]]
+                ) -> List[Tuple[int, List[Tuple[str, str]]]]:
+    """-> [(repeat_count, super_block_descs), ...] with minimal period."""
+    groups = []
+    rest = list(descs)
+    while rest:
+        found = None
+        for p in range(1, len(rest) + 1):
+            if len(rest) % p == 0 and rest == rest[:p] * (len(rest) // p):
+                found = p
+                break
+        if found is not None and len(rest) // found > 1:
+            groups.append((len(rest) // found, rest[:found]))
+            rest = []
+        else:
+            groups.append((1, rest[:1]))       # peel non-repeating head
+            rest = rest[1:]
+    # merge trailing singleton pattern case: single group of count 1
+    return groups
+
+
+# ------------------------------------------------------------------ #
+# per-layer init / apply
+# ------------------------------------------------------------------ #
+def _block_init(key, desc: Tuple[str, str], cfg: ArchConfig,
+                cross: bool = False) -> PyTree:
+    mixer, ffn = desc
+    ks = jax.random.split(key, 6)
+    p: Dict[str, PyTree] = {"norm1": L.rmsnorm_init(cfg.d_model)}
+    if mixer == "attn":
+        p["attn"] = L.attn_init(ks[0], cfg)
+    elif mixer == "mla":
+        p["attn"] = L.mla_init(ks[0], cfg)
+    else:
+        p["ssm"] = M.mamba_init(ks[0], cfg)
+    if cross:
+        p["normx"] = L.rmsnorm_init(cfg.d_model)
+        p["xattn"] = L.attn_init(ks[2], cfg)
+    if ffn != "none":
+        p["norm2"] = L.rmsnorm_init(cfg.d_model)
+    if ffn in ("moe", "moe+dense"):
+        p["moe"] = L.moe_init(ks[1], cfg)
+    if ffn in ("dense", "moe+dense"):
+        p["mlp"] = L.swiglu_init(ks[3], cfg.d_model,
+                                 cfg.d_ff if ffn != "moe" else cfg.d_ff)
+    return p
+
+
+def _block_apply(p, x, desc, cfg: ArchConfig, shard: ShardCfg,
+                 enc_out=None, causal=True):
+    """Full-sequence block.  Returns (x, aux_loss)."""
+    mixer, ffn = desc
+    aux = jnp.float32(0.0)
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if mixer == "attn":
+        h = L.attn_apply(p["attn"], h, cfg, causal=causal)
+    elif mixer == "mla":
+        h = L.mla_apply(p["attn"], h, cfg)
+    else:
+        h = M.mamba_apply(p["ssm"], h, cfg)
+    x = x + h
+    if "xattn" in p:
+        h = L.rmsnorm(p["normx"], x, cfg.norm_eps)
+        x = x + L.cross_attn_apply(p["xattn"], h, enc_out, cfg)
+    if ffn != "none":
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        add = jnp.zeros_like(x)
+        if "moe" in p:
+            mo, a = L.moe_apply(p["moe"], h, cfg)
+            add, aux = add + mo, aux + a
+        if "mlp" in p:
+            add = add + L.swiglu_apply(p["mlp"], h)
+        x = x + add
+    return shard.act_residual(x), aux
+
+
+def _block_cache_init(desc, cfg: ArchConfig, B: int, S_max: int,
+                      cross: bool = False) -> PyTree:
+    mixer, _ = desc
+    c: Dict[str, jax.Array] = {}
+    if mixer == "attn":
+        c["k"] = jnp.zeros((B, S_max, cfg.n_kv_heads, cfg.hd), L.PDT)
+        c["v"] = jnp.zeros((B, S_max, cfg.n_kv_heads, cfg.hd), L.PDT)
+    elif mixer == "mla":
+        c["c"] = jnp.zeros((B, S_max, cfg.kv_lora), L.PDT)
+        c["kr"] = jnp.zeros((B, S_max, cfg.rope_head_dim), L.PDT)
+    else:
+        inner, H, P_, N = M.ssm_dims(cfg)
+        c["state"] = jnp.zeros((B, H, N, P_), jnp.float32)
+        c["conv"] = jnp.zeros((B, cfg.ssm_conv - 1, inner + 2 * N), L.PDT)
+    if cross:
+        c["xk"] = jnp.zeros((B, cfg.enc_len, cfg.n_kv_heads * cfg.hd), L.PDT)
+        c["xv"] = jnp.zeros((B, cfg.enc_len, cfg.n_kv_heads * cfg.hd), L.PDT)
+    return c
+
+
+def _block_decode(p, x, cache, pos, desc, cfg: ArchConfig):
+    mixer, ffn = desc
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if mixer == "attn":
+        h, k, v = L.attn_decode(p["attn"], h, cache["k"], cache["v"], pos, cfg)
+        cache = dict(cache, k=k, v=v)
+    elif mixer == "mla":
+        h, c, kr = L.mla_decode(p["attn"], h, cache["c"], cache["kr"], pos, cfg)
+        cache = dict(cache, c=c, kr=kr)
+    else:
+        h, st, cv = M.mamba_decode(p["ssm"], h, cache["state"],
+                                   cache["conv"], cfg)
+        cache = dict(cache, state=st, conv=cv)
+    x = x + h
+    if "xattn" in p:                           # cross-attn from cached enc KV
+        hq = L.rmsnorm(p["normx"], x, cfg.norm_eps)
+        B = x.shape[0]
+        H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        q = (hq @ p["xattn"]["wq"]).reshape(B, 1, H, hd)
+        k = cache["xk"].reshape(B, -1, Hkv, hd)
+        v = cache["xv"].reshape(B, -1, Hkv, hd)
+        o = L._attend(q, k, v, causal=False)
+        x = x + o.reshape(B, 1, H * hd) @ p["xattn"]["wo"]
+    if ffn != "none":
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        add = jnp.zeros_like(x)
+        if "moe" in p:
+            mo, _ = L.moe_apply(p["moe"], h, cfg)
+            add = add + mo
+        if "mlp" in p:
+            add = add + L.swiglu_apply(p["mlp"], h)
+        x = x + add
+    return x, cache
+
+
+# ------------------------------------------------------------------ #
+# model init
+# ------------------------------------------------------------------ #
+def init_params(key, cfg: ArchConfig) -> PyTree:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    params: Dict[str, PyTree] = {
+        "embed": L._dense(ks[0], (cfg.vocab, d), scale=0.02),
+        "final_norm": L.rmsnorm_init(d),
+        "unembed": L._dense(ks[1], (d, cfg.vocab)),
+    }
+    groups = group_descs(layer_descs(cfg))
+    cross = cfg.enc_dec
+    gparams = []
+    gkey = ks[2]
+    for count, block in groups:
+        gkey, sub = jax.random.split(gkey)
+
+        def one(k, block=block):
+            bks = jax.random.split(k, len(block))
+            return {f"p{i}": _block_init(bk, desc, cfg, cross=cross)
+                    for i, (bk, desc) in enumerate(zip(bks, block))}
+        if count == 1:
+            gparams.append(one(sub))
+        else:
+            gparams.append(jax.vmap(one)(jax.random.split(sub, count)))
+    params["groups"] = gparams
+    if cfg.enc_dec:
+        enc_desc = ("attn", "dense")
+
+        def one_enc(k):
+            return {"p0": _block_init(k, enc_desc, cfg, cross=False)}
+        params["enc"] = jax.vmap(one_enc)(
+            jax.random.split(ks[3], cfg.n_enc_layers))
+        params["enc_norm"] = L.rmsnorm_init(d)
+    if cfg.frontend == "patches":
+        params["patch_proj"] = L._dense(ks[4], (d, d))
+    return params
+
+
+# ------------------------------------------------------------------ #
+# forward (train / prefill)
+# ------------------------------------------------------------------ #
+def _run_encoder(params, cfg, e, shard):
+    @jax.checkpoint
+    def enc_body(xx, bp):
+        xx, _ = _block_apply(bp["p0"], xx, ("attn", "dense"), cfg,
+                             shard, causal=False)
+        return xx, None
+    if FORCE_UNROLL:
+        for i in range(cfg.n_enc_layers):
+            e, _ = enc_body(e, _take(params["enc"], i))
+        return e
+    e, _ = jax.lax.scan(enc_body, e, params["enc"])
+    return e
+
+
+def _run_groups(params, cfg, x, shard, enc_out=None, causal=True,
+                collect_caches=False):
+    groups = group_descs(layer_descs(cfg))
+    aux_total = jnp.float32(0.0)
+    caches = []
+    for (count, block), gp in zip(groups, params["groups"]):
+        def super_block(xx, bp):
+            a_tot = jnp.float32(0.0)
+            for i, desc in enumerate(block):
+                xx, a = _block_apply(bp[f"p{i}"], xx, desc, cfg, shard,
+                                     enc_out=enc_out, causal=causal)
+                a_tot += a
+            return xx, a_tot
+        if count == 1:
+            x, a = super_block(x, gp)
+            aux_total += a
+        elif FORCE_UNROLL:
+            for i in range(count):
+                x, a = _remat(super_block)(x, _take(gp, i))
+                aux_total += a
+        else:
+            def scan_body(xx, bp):
+                return super_block(xx, bp)
+            x, a_s = jax.lax.scan(_remat(scan_body), x, gp)
+            aux_total += a_s.sum()
+    return x, aux_total
+
+
+def forward(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            shard: ShardCfg = NO_SHARD) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits, aux_loss)."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(L.PDT)
+    if cfg.frontend == "patches" and "patches" in batch:
+        proj = batch["patches"].astype(L.PDT) @ params["patch_proj"]
+        x = jax.lax.dynamic_update_slice(
+            x, proj[:, :min(cfg.n_patches, x.shape[1])], (0, 0, 0))
+    x = shard.act_residual(x)
+    enc_out = None
+    if cfg.enc_dec:
+        e = batch["frames"].astype(L.PDT)      # frontend stub: embeddings
+        e = shard.act_residual(e)
+        e = _run_encoder(params, cfg, e, shard)
+        enc_out = L.rmsnorm(params["enc_norm"], e, cfg.norm_eps)
+    x, aux = _run_groups(params, cfg, x, shard, enc_out=enc_out)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = x @ params["unembed"]
+    return shard.act_logits(logits), aux
+
+
+# ------------------------------------------------------------------ #
+# decode
+# ------------------------------------------------------------------ #
+def init_caches(cfg: ArchConfig, B: int, S_max: int) -> PyTree:
+    groups = group_descs(layer_descs(cfg))
+    caches = []
+    for count, block in groups:
+        def one(block=block):
+            return {f"p{i}": _block_cache_init(desc, cfg, B, S_max,
+                                               cross=cfg.enc_dec)
+                    for i, desc in enumerate(block)}
+        if count == 1:
+            caches.append(one())
+        else:
+            caches.append(jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (count,) + a.shape),
+                one()))
+    return caches
+
+
+def decode_step(params, cfg: ArchConfig, token: jax.Array, caches: PyTree,
+                pos: jax.Array, shard: ShardCfg = NO_SHARD
+                ) -> Tuple[jax.Array, PyTree]:
+    """One decode step.  token (B,1) int32; pos () int32."""
+    x = params["embed"][token].astype(L.PDT)
+    groups = group_descs(layer_descs(cfg))
+    new_caches = []
+    for (count, block), gp, gc in zip(groups, params["groups"], caches):
+        def super_block(xx, bp, bc):
+            nc = {}
+            for i, desc in enumerate(block):
+                xx, nc[f"p{i}"] = _block_decode(bp[f"p{i}"], xx,
+                                                bc[f"p{i}"], pos, desc, cfg)
+            return xx, nc
+        if count == 1:
+            x, nc = super_block(x, gp, gc)
+        elif FORCE_UNROLL:
+            ncs = []
+            for i in range(count):
+                x, nci = super_block(x, _take(gp, i), _take(gc, i))
+                ncs.append(nci)
+            nc = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ncs)
+        else:
+            def scan_body(xx, pc):
+                bp, bc = pc
+                xx, nc = super_block(xx, bp, bc)
+                return xx, nc
+            x, nc = jax.lax.scan(scan_body, x, (gp, gc))
+        new_caches.append(nc)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = x @ params["unembed"]
+    return shard.act_logits(logits), new_caches

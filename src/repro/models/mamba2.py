@@ -1,0 +1,158 @@
+"""Mamba-2 SSD (state-space duality) block — chunked matmul form.
+
+The SSD algorithm (arXiv:2405.21060) is the TPU-friendly formulation of the
+selective SSM: the sequence is split into chunks; within a chunk the
+recurrence is computed as a masked (L×L) matmul ("attention-like" dual), and
+states are passed between chunks with a tiny scan — so virtually all FLOPs
+land on the MXU.  Decode keeps an (H, N, P) state per layer, O(1) per token.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import PDT, _dense, rmsnorm, rmsnorm_init
+
+PyTree = Any
+
+
+def ssm_dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    inner = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_headdim
+    H = inner // P
+    N = cfg.ssm_state
+    return inner, H, P, N
+
+
+def mamba_init(key, cfg: ArchConfig) -> PyTree:
+    d = cfg.d_model
+    inner, H, P, N = ssm_dims(cfg)
+    ks = jax.random.split(key, 9)
+    return {
+        "wz": _dense(ks[0], (d, inner)),
+        "wx": _dense(ks[1], (d, inner)),
+        "wB": _dense(ks[2], (d, N)),
+        "wC": _dense(ks[3], (d, N)),
+        "wdt": _dense(ks[4], (d, H)),
+        "dt_bias": jnp.zeros((H,), PDT),
+        "A_log": jnp.zeros((H,), jnp.float32),            # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "conv": (jax.random.normal(ks[5], (cfg.ssm_conv, inner + 2 * N),
+                                   jnp.float32) * 0.2).astype(PDT),
+        "norm": rmsnorm_init(inner),
+        "wo": _dense(ks[6], (inner, d)),
+    }
+
+
+def _causal_conv(u: jax.Array, kern: jax.Array) -> jax.Array:
+    """Depthwise causal conv. u (B,S,ch), kern (W,ch)."""
+    W = kern.shape[0]
+    acc = u * kern[-1]
+    for i in range(1, W):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :-i or None]
+        acc = acc + shifted * kern[W - 1 - i]
+    return acc
+
+
+def ssd_chunked(x, dt, A_log, B_, C_, chunk: int):
+    """Chunked SSD scan.
+
+    x (B,S,H,P), dt (B,S,H) (post-softplus), A_log (H,), B_/C_ (B,S,N).
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, "caller pads sequence to chunk multiple"
+    A = -jnp.exp(A_log)                                    # (H,) negative
+    xc = x.reshape(Bb, nc, chunk, H, P)
+    dtc = dt.reshape(Bb, nc, chunk, H).astype(jnp.float32)
+    Bc = B_.reshape(Bb, nc, chunk, N).astype(jnp.float32)
+    Cc = C_.reshape(Bb, nc, chunk, N).astype(jnp.float32)
+    dA = dtc * A                                           # (B,nc,L,H)
+    cum = jnp.cumsum(dA, axis=2)
+    # --- intra-chunk (quadratic dual form)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,L,L,H)
+    ltri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(ltri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)             # (B,nc,L,L)
+    w = cb[..., None] * decay * dtc[:, :, None, :, :]      # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w,
+                         xc.astype(jnp.float32))
+    # --- chunk states
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,nc,L,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, decay_end * dtc,
+                        xc.astype(jnp.float32))            # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,nc,H)
+
+    def scan_fn(prev, inp):
+        st, cd = inp
+        new = prev * cd[..., None, None] + st
+        return new, prev
+
+    states_t = states.swapaxes(0, 1)                       # (nc,B,H,N,P)
+    cd_t = chunk_decay.swapaxes(0, 1)                      # (nc,B,H)
+    init = jnp.zeros((Bb, H, N, P), jnp.float32)
+    final, prevs = jax.lax.scan(scan_fn, init, (states_t, cd_t))
+    prev_states = prevs.swapaxes(0, 1)                     # (B,nc,H,N,P)
+    # --- inter-chunk contribution
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", Cc, jnp.exp(cum),
+                         prev_states)
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    return y.astype(x.dtype), final
+
+
+def mamba_apply(p, x, cfg: ArchConfig, chunk: int = 256,
+                return_state: bool = False):
+    """Full-sequence Mamba-2 block (train / prefill)."""
+    Bb, S, d = x.shape
+    inner, H, P, N = ssm_dims(cfg)
+    z = x @ p["wz"]                                        # (B,S,inner)
+    xs = x @ p["wx"]
+    Bv = x @ p["wB"]
+    Cv = x @ p["wC"]
+    u = jnp.concatenate([xs, Bv, Cv], -1)
+    u = jax.nn.silu(_causal_conv(u, p["conv"]))
+    xs, Bv, Cv = jnp.split(u, [inner, inner + N], axis=-1)
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"]
+                         .astype(jnp.float32))             # (B,S,H)
+    xh = xs.reshape(Bb, S, H, P)
+    ch = min(chunk, S) if S % chunk else chunk
+    y, state = ssd_chunked(xh, dt, p["A_log"], Bv, Cv, ch)
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(Bb, S, inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["wo"]
+    if return_state:
+        conv_tail = jnp.concatenate(
+            [x @ p["wx"], x @ p["wB"], x @ p["wC"]], -1)[:, -(cfg.ssm_conv - 1):]
+        return out, (state, conv_tail)
+    return out
+
+
+def mamba_decode(p, x, state, conv_cache, cfg: ArchConfig):
+    """One-token decode.  state (B,H,N,P); conv_cache (B,W-1,ch)."""
+    Bb = x.shape[0]
+    inner, H, P, N = ssm_dims(cfg)
+    z = x @ p["wz"]                                        # (B,1,inner)
+    u_t = jnp.concatenate([x @ p["wx"], x @ p["wB"], x @ p["wC"]], -1)
+    win = jnp.concatenate([conv_cache, u_t], 1)            # (B,W,ch)
+    conv_cache = win[:, 1:]
+    u = jax.nn.silu(jnp.einsum("bwc,wc->bc", win.astype(jnp.float32),
+                               p["conv"].astype(jnp.float32)))[:, None]
+    xs, Bv, Cv = jnp.split(u, [inner, inner + N], axis=-1)
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                   # (B,H)
+    xh = xs.reshape(Bb, H, P).astype(jnp.float32)
+    state = state * dA[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bv[:, 0].astype(jnp.float32), dt, xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cv[:, 0].astype(jnp.float32), state)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(Bb, 1, inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["wo"], state, conv_cache

@@ -1,0 +1,194 @@
+"""Sharding rules: parameter specs, activation constraints, batch specs.
+
+Mesh axes: ``("data","model")`` per pod, ``("pod","data","model")`` multi-pod.
+  * TP ("model"): attention heads, FFN hidden, vocab, experts (EP).
+  * DP ("pod","data"): batch; ZeRO-1 shards optimizer state further.
+  * SP: the residual stream is sequence-sharded on "model" between blocks
+    (Megatron-SP style; SPMD inserts the all-gather/reduce-scatter pairs).
+Rules degrade gracefully: any dim not divisible by its axis size falls back
+to replication (so reduced smoke configs run on 1 device with no mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCfg:
+    mesh: Optional[Mesh]
+    dp: Tuple[str, ...] = ("data",)
+    tp: str = "model"
+    seq_shard: bool = True          # Megatron-SP on the residual stream
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp] if self.mesh else 1
+
+    @property
+    def dp_size(self) -> int:
+        if not self.mesh:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.dp]))
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # -------------------------------------------------------------- #
+    def constrain(self, x, spec: P):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.named(spec))
+
+    def act_residual(self, x):
+        """(B,S,d) residual stream: batch on dp, seq on tp (SP)."""
+        if self.mesh is None:
+            return x
+        B, S = x.shape[0], x.shape[1]
+        bspec = self.dp if B % self.dp_size == 0 else None
+        sspec = self.tp if (self.seq_shard and S % self.tp_size == 0
+                            and S > 1) else None
+        return self.constrain(x, P(bspec, sspec, None))
+
+    def act_logits(self, x):
+        if self.mesh is None:
+            return x
+        B = x.shape[0]
+        bspec = self.dp if B % self.dp_size == 0 else None
+        return self.constrain(x, P(bspec, None, self.tp))
+
+
+NO_SHARD = ShardCfg(mesh=None)
+
+
+# ------------------------------------------------------------------ #
+# parameter specs by path rules
+# ------------------------------------------------------------------ #
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def _param_spec(path: str, shape: Tuple[int, ...], tp: str, tp_size: int
+                ) -> P:
+    """Rule table.  ``shape`` may have a leading scan/stack dim — rules match
+    on the trailing dims; leading dims get None."""
+    lead = (None,) * (len(shape) - 2)
+
+    def ok(dim_idx_from_end: int) -> bool:
+        return shape[len(shape) - dim_idx_from_end] % tp_size == 0
+
+    name = path.rsplit("/", 1)[-1]
+    expert = "/moe/" in path and "/shared/" not in path
+    if name in ("embed",):                       # (V, d)
+        return P(tp if shape[0] % tp_size == 0 else None, None)
+    if name in ("unembed",):                     # (d, V)
+        return P(None, tp if shape[-1] % tp_size == 0 else None)
+    if name in ("w1", "w3", "w2") and expert:    # (.., E, d, f): EP on E
+        lead3 = (None,) * (len(shape) - 3)
+        return P(*lead3, tp if ok(3) else None, None, None)
+    if name in ("w1", "w3"):                     # (.., d, f)
+        return P(*lead, None, tp if ok(1) else None)
+    if name == "w2":                             # (.., f, d)
+        return P(*lead, tp if ok(2) else None, None)
+    if name in ("wq", "wk", "wv", "wz", "wx", "wuk", "wuv"):
+        return P(*lead, None, tp if ok(1) else None)
+    if name in ("wo",):
+        return P(*lead, tp if ok(2) else None, None)
+    if name in ("router", "wdkv", "wkr", "wB", "wC", "wdt", "patch_proj",
+                "pos_emb"):
+        return P(*lead, None, None)
+    # 1-D / small leftovers (norms, A_log, D, dt_bias, conv) -> replicate
+    return P(*((None,) * len(shape)))
+
+
+def param_specs(params: PyTree, shard: ShardCfg) -> PyTree:
+    """PartitionSpec pytree matching ``params``.
+
+    Stacked (scanned) groups carry leading scan dims; rules apply to the
+    trailing two dims.  Expert stacks (E, d, f) are detected by rule name.
+    """
+    def spec_of(path, leaf):
+        return _param_spec(_path_str(path), tuple(getattr(leaf, "shape", ())),
+                           shard.tp, shard.tp_size)
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def zero1_specs(params: PyTree, pspecs: PyTree, shard: ShardCfg) -> PyTree:
+    """Optimizer-state specs: param spec + shard the largest replicated dim
+    over the data axes (ZeRO-1)."""
+    dp_size = shard.dp_size
+
+    def has_dp(parts) -> bool:
+        for ps in parts:
+            if ps is None:
+                continue
+            axes = ps if isinstance(ps, tuple) else (ps,)
+            if set(axes) & set(shard.dp):
+                return True
+        return False
+
+    def upgrade(leaf, spec):
+        shape = tuple(getattr(leaf, "shape", ()))
+        parts = list(spec)
+        if len(shape) != len(parts):
+            parts = [None] * len(shape)
+        if has_dp(parts):              # already dp-sharded (e.g. fsdp)
+            return P(*parts)
+        for i, (dim, ps) in enumerate(zip(shape, parts)):
+            if ps is None and dim % dp_size == 0 and dim >= dp_size > 1:
+                parts[i] = shard.dp
+                break
+        return P(*parts)
+    return jax.tree_util.tree_map(upgrade, params, pspecs)
+
+
+def batch_specs(batch: PyTree, shard: ShardCfg) -> PyTree:
+    def spec_of(leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        if not shape:
+            return P()
+        b = shard.dp if shape[0] % shard.dp_size == 0 else None
+        return P(b, *([None] * (len(shape) - 1)))
+    return jax.tree_util.tree_map(spec_of, batch)
+
+
+def cache_specs(cache: PyTree, shard: ShardCfg) -> PyTree:
+    """KV caches: (B, S, Hkv, hd) -> heads on tp when divisible, else the
+    sequence dim (MQA long-context: cache sequence-sharded)."""
+    tp, tps = shard.tp, shard.tp_size
+
+    def spec_of(path, leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        name = _path_str(path).rsplit("/", 1)[-1]
+
+        def bspec(idx_from_end):
+            dim = shape[len(shape) - idx_from_end]
+            return shard.dp if dim % shard.dp_size == 0 else None
+
+        if name in ("k", "v"):                   # (B,S,Hkv,hd) [+lead scan]
+            lead = (None,) * (len(shape) - 4)
+            if shape[-2] % tps == 0:
+                return P(*lead, bspec(4), None, tp, None)
+            return P(*lead, bspec(4), tp if shape[-3] % tps == 0 else None,
+                     None, None)
+        if name in ("c", "kr", "enc_out", "xk", "xv"):   # (B,S,*)
+            lead = (None,) * (len(shape) - 3)
+            return P(*lead, bspec(3),
+                     tp if shape[-2] % tps == 0 else None, None)
+        if name == "state":                      # (B,H,N,P) [+lead]
+            lead = (None,) * (len(shape) - 4)
+            return P(*lead, bspec(4), tp if shape[-3] % tps == 0 else None,
+                     None, None)
+        if name == "conv":                       # (B,W,ch)
+            lead = (None,) * (len(shape) - 3)
+            return P(*lead, bspec(3), None,
+                     tp if shape[-1] % tps == 0 else None)
+        return P(*([None] * len(shape)))
+    return jax.tree_util.tree_map_with_path(spec_of, cache)

@@ -1,0 +1,76 @@
+"""AdamW with fp32 master weights and ZeRO-1 partitioned state.
+
+Params live in bf16 (compute dtype); the optimizer holds fp32 master
+weights + first/second moments, all sharded per ``zero1_specs`` (param spec
+upgraded with a data-axis shard on the largest replicated dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    master: PyTree       # fp32 copy of params
+    m: PyTree            # fp32
+    v: PyTree            # fp32
+    count: jax.Array     # ()
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 100
+
+
+def init(params: PyTree) -> OptState:
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32), t)
+    zeros = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    return OptState(master=f32(params), m=zeros,
+                    v=jax.tree_util.tree_map(jnp.copy, zeros),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def _schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup, 1), 1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def update(grads: PyTree, state: OptState, params: PyTree,
+           cfg: AdamWConfig) -> Tuple[PyTree, OptState, jax.Array]:
+    """Returns (new params [original dtypes], new state, grad_norm)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    count = state.count + 1
+    lr = _schedule(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+    tm = jax.tree_util.tree_map
+    gs = tm(lambda g: g.astype(jnp.float32) * scale, grads)
+    m = tm(lambda m_, g: cfg.b1 * m_ + (1 - cfg.b1) * g, state.m, gs)
+    v = tm(lambda v_, g: cfg.b2 * v_ + (1 - cfg.b2) * g * g, state.v, gs)
+    master = tm(
+        lambda p, m_, v_: p - lr * ((m_ / b1c) / (jnp.sqrt(v_ / b2c)
+                                                  + cfg.eps)
+                                    + cfg.weight_decay * p),
+        state.master, m, v)
+    new_params = tm(lambda mp, old: mp.astype(old.dtype), master, params)
+    return new_params, OptState(master, m, v, count), gnorm

@@ -1,0 +1,187 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = Σ per-collective ring-model bytes / link_bw
+
+Collective bytes are NOT in cost_analysis: we parse the optimized HLO and
+apply ring-transfer factors per op kind (bytes a single chip must push
+through its ICI links):
+
+    all-gather      result_bytes · (G−1)/G
+    reduce-scatter  operand_bytes · (G−1)/G
+    all-reduce      2 · operand_bytes · (G−1)/G   (RS + AG)
+    all-to-all      operand_bytes · (G−1)/G
+    collective-permute  operand_bytes
+
+Hardware constants (TPU v5e-class): 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:%\S+\s*=\s*)?(.*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_moved: Dict[str, float]       # ring-model per-chip bytes
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_moved.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    moved: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        if "-done(" in line:            # count start ops only (async pairs)
+            continue
+        # group size
+        g = 0
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                g = int(gi.group(2))
+        g = max(g, 2)
+        factor = (g - 1) / g
+        # result shape = first shape on the line (lhs), operands inside parens
+        lhs = line.split("=", 1)[0] if "=" in line else ""
+        result_b = _shape_bytes(lhs) or _shape_bytes(line.split("(")[0])
+        args = line.split("(", 1)[1] if "(" in line else ""
+        operand_b = _shape_bytes(args.split(")", 1)[0])
+        if kind == "all-gather":
+            b = result_b * factor
+        elif kind == "all-reduce":
+            b = 2 * (operand_b or result_b) * factor
+        elif kind == "reduce-scatter":
+            b = (operand_b or result_b) * factor
+        elif kind == "all-to-all":
+            b = (operand_b or result_b) * factor
+        else:                            # collective-permute
+            b = operand_b or result_b
+        counts[kind] = counts.get(kind, 0) + 1
+        moved[kind] = moved.get(kind, 0.0) + b
+    return CollectiveStats(counts, moved)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_detail: Dict[str, float]
+    coll_counts: Dict[str, int]
+    peak_mem_bytes: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_detail": self.coll_detail,
+            "coll_counts": self.coll_counts,
+            "peak_mem_bytes": self.peak_mem_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+_MEM_RE = re.compile(r"(\d+)")
+
+
+def analyze_compiled(compiled) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    try:
+        mem = compiled.memory_analysis()
+        peak = float(getattr(mem, "temp_size_in_bytes", 0)
+                     + getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "output_size_in_bytes", 0)
+                     - getattr(mem, "alias_size_in_bytes", 0))
+    except Exception:
+        peak = 0.0
+    return Roofline(flops, byts, coll.total_bytes, coll.bytes_moved,
+                    coll.counts, peak)
+
+
+def model_flops(cfg, shape: dict) -> float:
+    """6·N_active·tokens (train) or 2·N_active·tokens (single fwd/decode)."""
+    n_active = cfg.active_param_count()
+    if shape["kind"] == "train":
+        toks = shape["global_batch"] * shape["seq_len"]
+        return 6.0 * n_active * toks
+    if shape["kind"] == "prefill":
+        toks = shape["global_batch"] * shape["seq_len"]
+        return 2.0 * n_active * toks
+    return 2.0 * n_active * shape["global_batch"]       # decode: 1 tok/seq

@@ -1,0 +1,141 @@
+"""Serving engine: prefill (cache-building) and batched decode steps.
+
+Prefill mirrors the training forward but captures per-layer KV/state caches
+through the layer-group scans; decode threads the caches through
+``lm.decode_step``.  Both are pjit-able; cache shardings come from
+``sharding.cache_specs`` (heads on TP when divisible, else cache sequence —
+the MQA long-context case).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import lm as lm_mod
+from repro.models.lm import (_block_apply, decode_step, group_descs,
+                             layer_descs)
+from repro.models.sharding import NO_SHARD, ShardCfg
+
+PyTree = Any
+
+
+def _prefill_block(p, x, desc, cfg, shard, enc_out, pad_to):
+    """Block apply that also returns its cache (padded to pad_to)."""
+    mixer, ffn = desc
+    cache: Dict[str, jax.Array] = {}
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    B, S, _ = x.shape
+
+    def pad(a, axis=1):
+        if pad_to is None or a.shape[axis] == pad_to:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, pad_to - a.shape[axis])
+        return jnp.pad(a, widths)
+
+    if mixer == "attn":
+        h, (k, v) = L.attn_apply(p["attn"], h, cfg, causal=True,
+                                 return_kv=True)
+        cache["k"], cache["v"] = pad(k), pad(v)
+    elif mixer == "mla":
+        ckv = h @ p["attn"]["wdkv"]
+        kr = (h @ p["attn"]["wkr"]).reshape(B, S, 1, cfg.rope_head_dim)
+        pos = jnp.arange(S)
+        cos, sin = L.rope_tables(pos, cfg.rope_head_dim, cfg.rope_theta)
+        cache["c"] = pad(ckv)
+        cache["kr"] = pad(L.apply_rope(kr, cos, sin)[:, :, 0])
+        h = L.mla_apply(p["attn"], h, cfg)
+    else:
+        h, (state, conv_tail) = M.mamba_apply(p["ssm"], h, cfg,
+                                              return_state=True)
+        cache["state"], cache["conv"] = state, conv_tail
+    x = x + h
+    if "xattn" in p:
+        hq = L.rmsnorm(p["normx"], x, cfg.norm_eps)
+        x = x + L.cross_attn_apply(p["xattn"], hq, enc_out, cfg)
+        cache["xk"] = enc_out @ p["xattn"]["wk"]
+        cache["xv"] = enc_out @ p["xattn"]["wv"]
+    if ffn != "none":
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        add = jnp.zeros_like(x)
+        if "moe" in p:
+            mo, _ = L.moe_apply(p["moe"], h, cfg)
+            add = add + mo
+        if "mlp" in p:
+            add = add + L.swiglu_apply(p["mlp"], h)
+        x = x + add
+    return shard.act_residual(x), cache
+
+
+def prefill(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            shard: ShardCfg = NO_SHARD, pad_to: int | None = None
+            ) -> Tuple[jax.Array, PyTree]:
+    """Full-sequence prefill.  Returns (logits, caches)."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(L.PDT)
+    if cfg.frontend == "patches" and "patches" in batch:
+        proj = batch["patches"].astype(L.PDT) @ params["patch_proj"]
+        x = jax.lax.dynamic_update_slice(
+            x, proj[:, :min(cfg.n_patches, x.shape[1])], (0, 0, 0))
+    x = shard.act_residual(x)
+    enc_out = None
+    if cfg.enc_dec:
+        e = batch["frames"].astype(L.PDT)
+
+        e = lm_mod._run_encoder(params, cfg, e, shard)
+        enc_out = L.rmsnorm(params["enc_norm"], e, cfg.norm_eps)
+    groups = group_descs(layer_descs(cfg))
+    caches = []
+    for (count, block), gp in zip(groups, params["groups"]):
+        def super_block(xx, bp):
+            cc = {}
+            for i, desc in enumerate(block):
+                xx, cc[f"p{i}"] = _prefill_block(bp[f"p{i}"], xx, desc, cfg,
+                                                 shard, enc_out, pad_to)
+            return xx, cc
+        if count == 1:
+            x, cc = super_block(x, gp)
+        elif lm_mod.FORCE_UNROLL:
+            ccs = []
+            for i in range(count):
+                x, cci = jax.checkpoint(super_block)(
+                    x, jax.tree_util.tree_map(lambda a: a[i], gp))
+                ccs.append(cci)
+            cc = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ccs)
+        else:
+            @jax.checkpoint
+            def scan_body(xx, bp):
+                return super_block(xx, bp)
+            x, cc = jax.lax.scan(scan_body, x, gp)
+        caches.append(cc)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = x @ params["unembed"]
+    return shard.act_logits(logits), caches
+
+
+def make_decode_step(cfg: ArchConfig, shard: ShardCfg = NO_SHARD):
+    def step(params, token, caches, pos):
+        return decode_step(params, cfg, token, caches, pos, shard)
+    return step
+
+
+def greedy_generate(params, cfg: ArchConfig, prompt: jax.Array,
+                    n_new: int, s_max: int) -> jax.Array:
+    """Simple batched greedy decoding loop (CPU example driver)."""
+    from repro.models.lm import init_caches
+    B, S0 = prompt.shape
+    logits, caches = prefill(params, cfg, {"tokens": prompt},
+                             pad_to=s_max)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(prompt.dtype)
+    out = [tok]
+    step = jax.jit(make_decode_step(cfg))
+    for t in range(n_new - 1):
+        logits, caches = step(params, tok, caches, jnp.int32(S0 + t))
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(prompt.dtype)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,38 @@
+"""Shared utilities: persistent compile cache, pow2 bucketing, timers."""
+from __future__ import annotations
+
+import os
+import time
+
+_CACHE_ON = False
+
+
+def enable_compile_cache() -> None:
+    """Persistent XLA compilation cache (huge win for the host-recursion
+    control plane, which reuses a small family of jitted kernels)."""
+    global _CACHE_ON
+    if _CACHE_ON or os.environ.get("REPRO_NO_CACHE"):
+        return
+    import jax
+    cache_dir = os.environ.get("REPRO_CACHE_DIR",
+                               os.path.expanduser("~/.cache/repro_jax"))
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.1)
+    _CACHE_ON = True
+
+
+def pow2(x: int, lo: int = 64) -> int:
+    v = lo
+    while v < x:
+        v *= 2
+    return v
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

@@ -1,0 +1,95 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import Graph
+from repro.graphs import generators as G
+
+
+def random_graph(n, p, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.random((n, n)) < p
+    a = np.triu(a, 1)
+    iu, ju = np.nonzero(a)
+    return Graph.from_edges(n, np.stack([iu, ju], 1))
+
+
+def test_from_edges_dedup_and_symmetry():
+    g = Graph.from_edges(4, [[0, 1], [1, 0], [0, 1], [2, 3]])
+    g.check()
+    assert g.m == 2
+    # parallel edge weights accumulate
+    assert g.adjwgt[g.xadj[0]:g.xadj[1]][0] == 3
+
+
+def test_self_loops_dropped():
+    g = Graph.from_edges(3, [[0, 0], [0, 1]])
+    g.check()
+    assert g.m == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 40), st.floats(0.05, 0.5), st.integers(0, 10_000))
+def test_invariants_random(n, p, seed):
+    g = random_graph(n, p, seed)
+    g.check()
+    # degrees consistent
+    assert g.degrees().sum() == g.nnz
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 30), st.integers(0, 1000))
+def test_induced_subgraph_property(n, seed):
+    g = random_graph(n, 0.3, seed)
+    rng = np.random.default_rng(seed)
+    keep = rng.random(n) < 0.6
+    sub, old = g.induced_subgraph(keep)
+    sub.check()
+    assert len(old) == keep.sum()
+    # every subgraph edge exists in parent
+    for v in range(sub.n):
+        for u in sub.neighbors(v):
+            assert old[u] in g.neighbors(old[v])
+    # every parent edge between kept vertices survives
+    newid = -np.ones(n, dtype=int)
+    newid[old] = np.arange(len(old))
+    for v in range(n):
+        if not keep[v]:
+            continue
+        for u in g.neighbors(v):
+            if keep[u]:
+                assert newid[u] in sub.neighbors(newid[v])
+
+
+def test_ell_roundtrip():
+    g = G.grid2d(5, 7)
+    nbr, wgt = g.to_ell()
+    for v in range(g.n):
+        row = nbr[v][nbr[v] >= 0]
+        assert set(row) == set(g.neighbors(v))
+
+
+def test_components():
+    g = Graph.from_edges(6, [[0, 1], [1, 2], [3, 4]])
+    comp = g.components()
+    assert comp[0] == comp[1] == comp[2]
+    assert comp[3] == comp[4]
+    assert comp[3] != comp[0]
+    assert comp[5] not in (comp[0], comp[3])
+
+
+@pytest.mark.parametrize("gen,n_expect", [
+    (lambda: G.grid2d(6, 7), 42),
+    (lambda: G.grid3d(4, 4, 4), 64),
+    (lambda: G.grid3d(4, 4, 4, stencil=27), 64),
+    (lambda: G.rgg2d(500, seed=2), 500),
+    (lambda: G.circuit(800, seed=3), 800),
+    (lambda: G.knn3d(300, k=8, seed=4), 300),
+    (lambda: G.cage_like(600, seed=5), None),
+])
+def test_generators_valid(gen, n_expect):
+    g = gen()
+    g.check()
+    if n_expect:
+        assert g.n == n_expect
+    assert g.m > 0

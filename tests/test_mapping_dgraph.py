@@ -1,0 +1,94 @@
+"""Static mapping (expert placement) + distributed-graph tests."""
+import numpy as np
+import pytest
+
+from repro.core.dgraph import distribute, halo_reference
+from repro.core.graph import Graph
+from repro.core.mapping import (DeviceTier, cut_weight, edge_bisect,
+                                expert_placement, static_map, traffic_cost)
+from repro.graphs import generators as G
+
+
+def test_edge_bisect_balanced_low_cut():
+    g = G.grid2d(12, 12)
+    half = edge_bisect(g, seed=0)
+    w0, w1 = g.vwgt[half == 0].sum(), g.vwgt[half == 1].sum()
+    assert abs(w0 - w1) <= 0.3 * g.total_vwgt()
+    # a 12x12 grid bisects with cut ~12; accept up to 3x
+    assert cut_weight(g, half) <= 36
+
+
+def test_static_map_covers_all_devices():
+    g = G.grid2d(16, 16)
+    tiers = [DeviceTier(2, 10.0), DeviceTier(4, 1.0)]
+    assign = static_map(g, tiers, seed=1)
+    assert set(np.unique(assign)) == set(range(8))
+    counts = np.bincount(assign, minlength=8)
+    assert counts.min() >= 0.5 * counts.max()     # balance
+
+
+def test_expert_placement_beats_random():
+    """Clustered co-activation -> scotch mapping keeps clusters on-pod."""
+    rng = np.random.default_rng(0)
+    E = 32
+    co = rng.random((E, E)) * 0.05
+    for blk in range(4):                           # 4 hot cliques of 8
+        idx = np.arange(blk * 8, blk * 8 + 8)
+        co[np.ix_(idx, idx)] += 1.0
+    co = (co + co.T) / 2
+    assign = expert_placement(co, n_pods=2, chips_per_pod=4,
+                              inter_pod_cost=10.0, seed=0)
+    iu, ju = np.nonzero(np.triu(co, 1))
+    w = co[iu, ju]
+    scale = max(w.max(), 1e-9)
+    g = Graph.from_edges(E, np.stack([iu, ju], 1),
+                         ewgt=np.maximum((w / scale * 1000).astype(np.int64),
+                                         1))
+    tiers = [DeviceTier(2, 10.0), DeviceTier(4, 1.0)]
+    cost_scotch = traffic_cost(g, assign, tiers)
+    costs_rand = []
+    for s in range(5):
+        r = np.random.default_rng(s).integers(0, 8, E)
+        costs_rand.append(traffic_cost(g, r, tiers))
+    assert cost_scotch < 0.7 * np.mean(costs_rand)
+
+
+# ------------------------------------------------------------------ #
+def test_distribute_structure():
+    g = G.grid2d(8, 8)
+    dg = distribute(g, 4)
+    assert dg.nparts == 4
+    assert dg.vtxdist[-1] == g.n
+    # every real adjacency slot resolves to a local or ghost index
+    for p in range(4):
+        nl = dg.vtxdist[p + 1] - dg.vtxdist[p]
+        row = dg.nbr_gst[p, :nl]
+        deg = g.degrees()[dg.vtxdist[p]:dg.vtxdist[p + 1]]
+        for li in range(nl):
+            real = row[li][:deg[li]]
+            assert (real >= 0).all()
+            ghosts = real[real >= dg.n_loc_max] - dg.n_loc_max
+            assert (ghosts < dg.n_ghost[p]).all()
+    # ghost ordering: ascending (owner, gid)  (§2.1 cache-friendly order)
+    owner = np.searchsorted(dg.vtxdist, np.arange(g.n), side="right") - 1
+    for p in range(4):
+        gl = dg.ghost_gid[p][dg.ghost_gid[p] >= 0]
+        keys = [(owner[u], u) for u in gl]
+        assert keys == sorted(keys)
+
+
+def test_halo_reference_values():
+    g = G.grid2d(6, 6)
+    dg = distribute(g, 3)
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 100, (3, dg.n_loc_max)).astype(np.int32)
+    ext = halo_reference(dg, x)
+    # ghost slot k of part p must equal the owner's local value
+    flat = np.zeros(g.n, np.int32)
+    for p in range(3):
+        lo, hi = dg.vtxdist[p], dg.vtxdist[p + 1]
+        flat[lo:hi] = x[p, :hi - lo]
+    for p in range(3):
+        for k, gid in enumerate(dg.ghost_gid[p]):
+            if gid >= 0:
+                assert ext[p, dg.n_loc_max + k] == flat[gid]

@@ -1,0 +1,183 @@
+"""Invariant tests for the paper's core pipeline: matching, coarsening,
+initial separator, band extraction, FM, nested dissection."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.band import bfs_distance, extract_band, project_band
+from repro.core.coarsen import coarsen_multilevel, coarsen_once, match_graph
+from repro.core.fm import refine_parts, separator_is_valid
+from repro.core.graph import Graph
+from repro.core.initsep import initial_separator
+from repro.core.nd import NDConfig, compute_separator, nested_dissection
+from repro.core.matching import validate_matching
+from repro.graphs import generators as G
+from repro.sparse.symbolic import nnz_opc
+
+
+def random_graph(n, p, seed):
+    rng = np.random.default_rng(seed)
+    a = np.triu(rng.random((n, n)) < p, 1)
+    iu, ju = np.nonzero(a)
+    if len(iu) == 0:
+        iu, ju = np.array([0]), np.array([1])
+    return Graph.from_edges(n, np.stack([iu, ju], 1))
+
+
+# ------------------------------------------------------------------ #
+# matching
+# ------------------------------------------------------------------ #
+@settings(max_examples=10, deadline=None)
+@given(st.integers(4, 80), st.integers(0, 100))
+def test_matching_is_involution(n, seed):
+    g = random_graph(n, 0.2, seed)
+    m = match_graph(g, seed)
+    assert validate_matching(m)
+
+
+def test_matching_respects_edges():
+    g = G.grid2d(10, 10)
+    m = match_graph(g, 3)
+    for v in range(g.n):
+        if m[v] != v:
+            assert m[v] in g.neighbors(v)
+
+
+def test_matching_rate():
+    g = G.grid3d(8, 8, 8)
+    m = match_graph(g, 0)
+    frac = (m != np.arange(g.n)).mean()
+    assert frac > 0.7  # paper: converges in ~5 rounds to near-complete
+
+
+# ------------------------------------------------------------------ #
+# coarsening
+# ------------------------------------------------------------------ #
+@settings(max_examples=10, deadline=None)
+@given(st.integers(8, 60), st.integers(0, 100))
+def test_coarsen_conserves_weight(n, seed):
+    g = random_graph(n, 0.25, seed)
+    m = match_graph(g, seed)
+    cg, cmap = coarsen_once(g, m)
+    cg.check()
+    assert cg.vwgt.sum() == g.vwgt.sum()
+    assert cmap.max() == cg.n - 1
+    # matched pairs map together
+    for v in range(g.n):
+        assert cmap[v] == cmap[m[v]]
+
+
+def test_multilevel_reduces_and_folds():
+    g = G.grid2d(24, 24)
+    st_ = coarsen_multilevel(g, 0, nproc=8, coarse_target=60)
+    sizes = [l.graph.n for l in st_.levels]
+    assert sizes[0] == g.n and sizes[-1] <= max(60, sizes[-2])
+    assert all(a > b for a, b in zip(sizes, sizes[1:]))
+    insts = [l.n_instances for l in st_.levels]
+    assert insts[-1] > 1  # fold-dup kicked in
+
+
+# ------------------------------------------------------------------ #
+# separators: initial, FM, band
+# ------------------------------------------------------------------ #
+def test_initial_separator_valid_and_balanced():
+    g = G.grid2d(12, 12)
+    part, sep_w = initial_separator(g, 0, k_tries=4)
+    nbr, _ = g.to_ell()
+    assert separator_is_valid(nbr, part)
+    w = [g.vwgt[part == p].sum() for p in (0, 1, 2)]
+    assert w[2] == sep_w
+    assert abs(w[0] - w[1]) <= 0.25 * g.total_vwgt()
+
+
+def test_fm_never_worsens_separator():
+    g = G.grid2d(16, 16)
+    part, sep0 = initial_separator(g, 1, k_tries=2)
+    nbr, _ = g.to_ell()
+    part2, sep1, _ = refine_parts(nbr, g.vwgt, part, np.zeros(g.n, bool), 7)
+    assert separator_is_valid(nbr, part2)
+    assert sep1 <= sep0 + 1e-6
+
+
+def test_bfs_distance():
+    g = G.grid2d(9, 9)
+    nbr, _ = g.to_ell()
+    src = np.zeros(g.n, bool)
+    src[0] = True  # corner (0,0)
+    d = np.asarray(bfs_distance(jnp.asarray(nbr), jnp.asarray(src), 4))
+    xs, ys = np.meshgrid(np.arange(9), np.arange(9), indexing="ij")
+    manhattan = (xs + ys).ravel()
+    expect = np.minimum(manhattan, 5)  # clipped at width+1
+    assert np.array_equal(np.minimum(d, 5), expect)
+
+
+def test_band_contains_separator_and_projects():
+    g = G.grid2d(20, 20)
+    part, _ = initial_separator(g, 2, k_tries=4)
+    band, bpart, locked, old = extract_band(g, part, width=3)
+    band.check()
+    # all separator vertices are in the band
+    sep_ids = set(np.nonzero(part == 2)[0])
+    assert sep_ids <= set(old[old >= 0])
+    # anchors are last two, locked, on sides 0/1
+    assert locked[-2:].all() and not locked[:-2].any()
+    assert bpart[-2] == 0 and bpart[-1] == 1
+    # anchor weights preserve global balance
+    tot_band = band.vwgt.sum()
+    assert tot_band == g.total_vwgt()
+    # refined band projects to a valid separator of the full graph
+    nbr_band, _ = band.to_ell()
+    bpart2, _, _ = refine_parts(nbr_band, band.vwgt, bpart, locked, 5)
+    full = project_band(part, bpart2, old)
+    nbr, _ = g.to_ell()
+    assert separator_is_valid(nbr, full)
+
+
+def test_band_width3_quality_close_to_unconstrained():
+    """Paper §3.3: band FM with width 3 matches (or beats) unconstrained FM."""
+    g = G.grid3d(8, 8, 8)
+    cfg_band = NDConfig(use_band=True)
+    cfg_full = NDConfig(use_band=False)
+    p_band = compute_separator(g, 3, 4, cfg_band)
+    p_full = compute_separator(g, 3, 4, cfg_full)
+    w_band = g.vwgt[p_band == 2].sum()
+    w_full = g.vwgt[p_full == 2].sum()
+    assert w_band <= w_full * 1.35
+
+
+# ------------------------------------------------------------------ #
+# nested dissection end-to-end
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("nproc", [1, 4])
+def test_nd_is_permutation(nproc):
+    g = G.grid2d(14, 14)
+    perm = nested_dissection(g, seed=0, nproc=nproc)
+    assert np.array_equal(np.sort(perm), np.arange(g.n))
+
+
+def test_nd_beats_natural_order():
+    g = G.grid3d(9, 9, 9)
+    perm = nested_dissection(g, seed=0)
+    opc_nd = nnz_opc(g, perm)[1]
+    opc_nat = nnz_opc(g, np.arange(g.n))[1]
+    assert opc_nd < 0.5 * opc_nat
+
+
+def test_nd_disconnected():
+    a = G.grid2d(7, 7)
+    src = np.repeat(np.arange(a.n), a.degrees())
+    e1 = np.stack([src, a.adjncy], 1)
+    e2 = e1 + a.n
+    g = Graph.from_edges(2 * a.n, np.concatenate([e1, e2]))
+    perm = nested_dissection(g, seed=0)
+    assert np.array_equal(np.sort(perm), np.arange(g.n))
+
+
+def test_nd_quality_stable_with_nproc():
+    """Paper's headline: quality does not degrade as process count grows."""
+    g = G.grid3d(8, 8, 8)
+    opcs = [nnz_opc(g, nested_dissection(g, seed=5, nproc=p))[1]
+            for p in (1, 8, 32)]
+    assert max(opcs) <= min(opcs) * 1.25

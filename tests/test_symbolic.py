@@ -1,0 +1,66 @@
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import Graph
+from repro.graphs import generators as G
+from repro.sparse.etree import etree, postorder
+from repro.sparse.mindeg import min_degree
+from repro.sparse.symbolic import dense_fill_oracle, nnz_opc
+
+
+def random_graph(n, p, seed):
+    rng = np.random.default_rng(seed)
+    a = np.triu(rng.random((n, n)) < p, 1)
+    iu, ju = np.nonzero(a)
+    if len(iu) == 0:
+        iu, ju = np.array([0]), np.array([1])
+    return Graph.from_edges(n, np.stack([iu, ju], 1))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 40), st.floats(0.05, 0.6), st.integers(0, 10**6))
+def test_counts_match_dense_oracle(n, p, seed):
+    g = random_graph(n, p, seed)
+    perm = np.random.default_rng(seed).permutation(n)
+    assert nnz_opc(g, perm) == dense_fill_oracle(g, perm)
+
+
+def test_postorder_is_valid():
+    g = G.grid2d(6, 6)
+    parent = etree(g, np.arange(g.n))
+    post = postorder(parent)
+    assert np.array_equal(np.sort(post), np.arange(g.n))
+    # children appear before parents
+    pos = np.empty(g.n, dtype=int)
+    pos[post] = np.arange(g.n)
+    for v in range(g.n):
+        if parent[v] != -1:
+            assert pos[v] < pos[parent[v]]
+
+
+def test_known_chain():
+    # path graph ordered naturally: no fill, col counts = 2,2,...,2,1
+    n = 10
+    g = Graph.from_edges(n, np.stack([np.arange(n - 1), np.arange(1, n)], 1))
+    nnz, opc = nnz_opc(g, np.arange(n))
+    assert nnz == 2 * n - 1
+    assert opc == 4 * (n - 1) + 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(10, 35), st.integers(0, 1000))
+def test_mindeg_beats_random(n, seed):
+    g = random_graph(n, 0.15, seed)
+    perm_md = min_degree(g)
+    assert np.array_equal(np.sort(perm_md), np.arange(n))
+    rng = np.random.default_rng(seed + 1)
+    opc_md = nnz_opc(g, perm_md)[1]
+    opc_rnd = np.mean([nnz_opc(g, rng.permutation(n))[1] for _ in range(4)])
+    assert opc_md <= opc_rnd * 1.05  # MD should not be worse than random
+
+
+def test_mindeg_grid_quality():
+    g = G.grid2d(12, 12)
+    opc_md = nnz_opc(g, min_degree(g))[1]
+    opc_nat = nnz_opc(g, np.arange(g.n))[1]
+    assert opc_md < 0.6 * opc_nat

@@ -1,0 +1,55 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline claims of PT-Scotch, on a 3D-mesh analog of the paper's test
+graphs, end to end through the public API:
+  1. quality does not degrade as the (simulated) process count grows;
+  2. the ParMETIS-like baseline degrades with process count and is beaten;
+  3. orderings are deterministic for a fixed seed (paper §4);
+  4. OPC scales like the theory for nested dissection on 3D meshes.
+"""
+import numpy as np
+import pytest
+
+from repro.core.baselines import parmetis_like, pt_scotch_like
+from repro.graphs.generators import grid3d
+from repro.sparse.symbolic import nnz_opc
+
+
+@pytest.fixture(scope="module")
+def g():
+    return grid3d(9, 9, 9)
+
+
+@pytest.fixture(scope="module")
+def opc_by_p(g):
+    return {p: nnz_opc(g, pt_scotch_like(g, seed=2, nproc=p))[1]
+            for p in (1, 8, 64)}
+
+
+def test_quality_stable_with_procs(opc_by_p):
+    vals = list(opc_by_p.values())
+    assert max(vals) <= min(vals) * 1.25
+
+
+def test_beats_parmetis_like_at_scale(g, opc_by_p):
+    o_pm = nnz_opc(g, parmetis_like(g, seed=2, nproc=64))[1]
+    assert o_pm > 1.5 * opc_by_p[64]       # paper: up to ~2x at p=64
+
+
+def test_deterministic_fixed_seed(g):
+    p1 = pt_scotch_like(g, seed=7, nproc=8)
+    p2 = pt_scotch_like(g, seed=7, nproc=8)
+    assert np.array_equal(p1, p2)
+
+
+def test_opc_scaling_3d():
+    """ND on an n-vertex 3D mesh: OPC = O(n^2) (separator O(n^{2/3}),
+    dense frontal O(sep^3) = O(n^2)); natural order is far worse."""
+    small, large = grid3d(6, 6, 6), grid3d(12, 12, 12)
+    o_s = nnz_opc(small, pt_scotch_like(small, seed=0))[1]
+    o_l = nnz_opc(large, pt_scotch_like(large, seed=0))[1]
+    growth = o_l / o_s
+    n_ratio = large.n / small.n               # 8
+    assert growth < n_ratio ** 2.6            # clearly sub-natural-order
+    o_nat = nnz_opc(large, np.arange(large.n))[1]
+    assert o_l < 0.45 * o_nat
