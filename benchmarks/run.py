@@ -17,6 +17,7 @@ MODULES = [
     ("band", "benchmarks.band_ablation"),
     ("folddup", "benchmarks.folddup_ablation"),
     ("kernel", "benchmarks.kernel_bench"),
+    ("service", "benchmarks.service_bench"),
 ]
 
 

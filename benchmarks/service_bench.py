@@ -1,0 +1,131 @@
+"""Ordering-service throughput vs looped sequential driver.
+
+Measures orderings/sec over a mixed-size request stream containing
+duplicate submissions (the realistic traffic shape the fingerprint cache
+exists for), and verifies the service returns *identical* permutations —
+hence identical OPC — to looped ``core.nd.nested_dissection`` calls, on
+the paper's Table-2-style graphs as well.
+
+Emits ``BENCH_service.json`` next to the CWD so the perf trajectory is
+tracked from this PR onward.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import quick, row
+from repro.core.nd import nested_dissection
+from repro.graphs import generators as G
+from repro.service import OrderingService
+from repro.sparse.symbolic import nnz_opc
+
+
+def workload():
+    """(unique graphs, request stream of (graph_idx, seed, nproc))."""
+    if quick():
+        uniq = [G.grid2d(14, 14), G.grid3d(6, 6, 6), G.grid2d(16, 12),
+                G.circuit(420, seed=3), G.grid2d(13, 11),
+                G.rgg2d(300, seed=2), G.grid3d(7, 7, 7), G.grid2d(18, 9)]
+        reps = 3                         # 24 requests over 8 unique graphs
+    else:
+        uniq = [G.grid3d(12, 12, 12), G.grid2d(48, 48), G.circuit(4000, seed=3),
+                G.rgg2d(3000, seed=2), G.grid3d(10, 10, 14),
+                G.cage_like(2500, seed=5), G.grid2d(40, 52),
+                G.grid3d(11, 11, 11)]
+        reps = 3
+    stream = [(i, i, 4) for _ in range(reps) for i in range(len(uniq))]
+    return uniq, stream
+
+
+def quality_graphs():
+    """Table-2-style graphs for the OPC-identity check."""
+    if quick():
+        return {"altr4-like": G.grid3d(9, 9, 9),
+                "cage-like": G.cage_like(1000, seed=5)}
+    return {"altr4-like": G.grid3d(11, 11, 11),
+            "qimonda-like": G.circuit(6000, seed=7),
+            "cage-like": G.cage_like(3000, seed=5)}
+
+
+def run_service(uniq, stream):
+    """Submit the stream in arrival waves, draining between waves.
+
+    The first wave computes every unique problem (bucketed); later waves
+    of the stream repeat fingerprints and resolve from the cache at
+    submit time — the traffic pattern the service is built for.
+    """
+    svc = OrderingService()
+    wave = max(len(uniq), 1)
+    t0 = time.perf_counter()
+    rids = []
+    for k in range(0, len(stream), wave):
+        for i, s, p in stream[k:k + wave]:
+            rids.append(svc.submit(uniq[i], seed=s, nproc=p))
+        svc.drain()
+    dt = time.perf_counter() - t0
+    perms = [svc.poll(r).perm for r in rids]
+    return perms, dt, svc.stats()
+
+
+def run_loop(uniq, stream):
+    t0 = time.perf_counter()
+    perms = [nested_dissection(uniq[i], seed=s, nproc=p)
+             for i, s, p in stream]
+    return perms, time.perf_counter() - t0
+
+
+def main() -> None:
+    uniq, stream = workload()
+    # one warmup pass per path builds the jit caches both will reuse
+    run_service(uniq, stream[:len(uniq)])
+    run_loop(uniq, stream[:4])
+
+    perms_svc, dt_svc, stats = run_service(uniq, stream)
+    perms_loop, dt_loop = run_loop(uniq, stream)
+    for k, (a, b) in enumerate(zip(perms_svc, perms_loop)):
+        assert np.array_equal(a, b), f"service != loop on request {k}"
+
+    n_req = len(stream)
+    ops_svc = n_req / dt_svc
+    ops_loop = n_req / dt_loop
+    speedup = ops_svc / ops_loop
+    row("service/throughput", dt_svc / n_req * 1e6,
+        ops_svc=round(ops_svc, 2), ops_loop=round(ops_loop, 2),
+        speedup=round(speedup, 2),
+        hit_rate=stats["cache_hit_rate"],
+        p50_ms=stats["p50_latency_ms"], p95_ms=stats["p95_latency_ms"])
+
+    opc = {}
+    for name, g in quality_graphs().items():
+        svc = OrderingService()
+        rid = svc.submit(g, seed=0, nproc=8)
+        svc.drain()
+        perm_svc = svc.poll(rid).perm
+        perm_seq = nested_dissection(g, seed=0, nproc=8)
+        assert np.array_equal(perm_svc, perm_seq), f"OPC drift on {name}"
+        o = nnz_opc(g, perm_svc)[1]
+        opc[name] = o
+        row(f"service/opc/{name}", 0.0, OPC=f"{o:.3e}", identical=True)
+
+    out = {
+        "n_requests": n_req,
+        "n_unique": len(uniq),
+        "orderings_per_sec_service": round(ops_svc, 3),
+        "orderings_per_sec_loop": round(ops_loop, 3),
+        "speedup": round(speedup, 3),
+        "cache_hit_rate": stats["cache_hit_rate"],
+        "p50_latency_ms": stats["p50_latency_ms"],
+        "p95_latency_ms": stats["p95_latency_ms"],
+        "opc": {k: float(v) for k, v in opc.items()},
+        "quick": quick(),
+    }
+    with open("BENCH_service.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote BENCH_service.json (speedup {speedup:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

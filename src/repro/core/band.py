@@ -7,17 +7,27 @@ connected to the last band layer of their side.  The distance sweep is the
 paper's "spreading distance information from all of the separator vertices,
 using our halo exchange routine" — here a vectorized ELL relaxation in JAX
 (one halo exchange per width step in the distributed version).
+
+The ordering service batches this stage: pipeline tasks yield a ``BFSWork``
+per uncoarsening level and ``execute_bfs_works`` runs every work sharing a
+padded ELL bucket as one batched sweep (the Mosaic kernel
+``kernels.band_batch.bfs_multi`` on TPU, fused XLA on CPU hosts) —
+DESIGN.md §3.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Tuple
+import os
+from collections import defaultdict
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import Graph
+from repro.util import pow2
 
 UNREACH = np.int32(2 ** 30)
 
@@ -34,9 +44,85 @@ def bfs_distance(nbr: jax.Array, src_mask: jax.Array, width: int) -> jax.Array:
     return dist
 
 
-def extract_band(g: Graph, part: np.ndarray, width: int = 3
+@functools.partial(jax.jit, static_argnames=("width",))
+def bfs_distance_multi(nbr: jax.Array, src: jax.Array, width: int
+                       ) -> jax.Array:
+    """Batched ``bfs_distance`` over a (L, n, d) bucket (fused-XLA path)."""
+    L, n, d = nbr.shape
+    valid = nbr >= 0
+    idx = jnp.where(valid, nbr, 0)
+    dist = jnp.where(src != 0, 0, UNREACH).astype(jnp.int32)
+    for _ in range(width):
+        dn = jnp.take_along_axis(dist, idx.reshape(L, n * d),
+                                 axis=1).reshape(L, n, d)
+        dn = jnp.where(valid, dn, UNREACH)
+        dist = jnp.minimum(dist, jnp.min(dn, axis=2) + 1)
+    return dist
+
+
+def bfs_mode_default() -> str:
+    """Band-BFS backend: REPRO_BFS_MODE=jnp|pallas|auto (TPU → Mosaic)."""
+    mode = os.environ.get("REPRO_BFS_MODE", "auto")
+    if mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return mode
+
+
+#: per-graph VMEM budget for the bfs_multi kernel, which keeps one graph's
+#: whole (n, d) ELL tile + distance vector resident per grid step.  Buckets
+#: above this fall back to the fused-XLA path (which handles any size).
+_BFS_VMEM_BUDGET_BYTES = 4 * 2 ** 20
+
+
+@dataclasses.dataclass
+class BFSWork:
+    """One band-distance request (unpadded host arrays)."""
+    nbr: np.ndarray                     # (n, d) int32 ELL ids, -1 pad
+    src: np.ndarray                     # (n,) bool separator mask
+    width: int
+
+    def bucket_key(self) -> Tuple[int, int, int]:
+        n, d = self.nbr.shape
+        return (pow2(n), pow2(max(d, 1), 8), self.width)
+
+
+def execute_bfs_works(works: Sequence[BFSWork],
+                      mode: Optional[str] = None) -> List[np.ndarray]:
+    """Run BFS works, one batched dispatch per (n_pad, d_pad, width) bucket."""
+    if mode is None:
+        mode = bfs_mode_default()
+    results: List[Optional[np.ndarray]] = [None] * len(works)
+    groups = defaultdict(list)
+    for i, w in enumerate(works):
+        groups[w.bucket_key()].append(i)
+    for (n_pad, d_pad, width), idxs in groups.items():
+        L = len(idxs)
+        nbr_b = -np.ones((L, n_pad, d_pad), np.int32)
+        src_b = np.zeros((L, n_pad), np.int32)
+        for j, i in enumerate(idxs):
+            n, d = works[i].nbr.shape
+            nbr_b[j, :n, :d] = works[i].nbr
+            src_b[j, :n] = works[i].src
+        tile_bytes = 4 * n_pad * (d_pad + 2)    # ELL tile + dist + src
+        if mode == "pallas" and tile_bytes <= _BFS_VMEM_BUDGET_BYTES:
+            from repro.kernels.ops import band_bfs_batch
+            dist = np.asarray(band_bfs_batch(nbr_b, src_b, width))
+        else:
+            dist = np.asarray(bfs_distance_multi(
+                jnp.asarray(nbr_b), jnp.asarray(src_b), width))
+        for j, i in enumerate(idxs):
+            results[i] = dist[j, :works[i].nbr.shape[0]]
+    return results                                           # type: ignore
+
+
+def extract_band(g: Graph, part: np.ndarray, width: int = 3,
+                 dist: Optional[np.ndarray] = None
                  ) -> Tuple[Graph, np.ndarray, np.ndarray, np.ndarray]:
     """Build the band graph around the separator.
+
+    ``dist`` optionally supplies a precomputed distance sweep (the bucketed
+    service path batches it across subproblems); when absent it is computed
+    here with the single-graph kernel.
 
     Returns (band_graph, band_part, locked, old_ids):
       * band_graph has n_band + 2 vertices; the last two are the anchors
@@ -44,9 +130,11 @@ def extract_band(g: Graph, part: np.ndarray, width: int = 3
       * band_part / locked are the FM initial state (anchors locked);
       * old_ids maps band vertex -> original vertex (-1 for anchors).
     """
-    nbr, _ = g.to_ell()
-    dist = np.asarray(bfs_distance(jnp.asarray(nbr),
-                                   jnp.asarray(part == 2), width))
+    if dist is None:
+        nbr, _ = g.to_ell()
+        dist = np.asarray(bfs_distance(jnp.asarray(nbr),
+                                       jnp.asarray(part == 2), width))
+    dist = np.asarray(dist)[:g.n]
     in_band = dist <= width
     sub, old_ids = g.induced_subgraph(in_band)
     nb = sub.n

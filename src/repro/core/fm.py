@@ -9,45 +9,40 @@ invariant).  Gain = vwgt[v] − Σ pulled weights.  Moves may be negative
 The paper's *multi-sequential* refinement — "centralized copies of this band
 graph ... serve to run fully independent instances of our sequential FM
 algorithm; the perturbation of the initial state ... allows us to explore
-slightly different solution spaces" — is here a ``vmap`` over K instances
-whose first ``n_pert`` moves are randomized.  Batching over instances is the
-TPU-native form of the paper's one-instance-per-process scheme.
+slightly different solution spaces" — is a ``vmap`` over independent
+instances.  Since the service PR, the batch axis is a flat *lane* axis that
+may mix instances of *different* graphs padded to the same ELL bucket: the
+ordering service gathers band-FM work from every ND node at the same depth
+and executes one ``fm_refine_multi`` dispatch per shape bucket (DESIGN.md
+§3).  Per-lane results are independent of batch composition, so bucketed
+execution is bit-compatible with one-work-at-a-time execution.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Tuple
+import os
+from collections import defaultdict
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.util import pow2 as _pow2    # shared bucketing: one definition
+
 NEG_INF = -jnp.inf
 BIG_NOISE = 1e9
 
 
-def _fm_single(nbr, vwgt, part_init, locked, key, eps_frac, max_moves,
-               n_pert, passes: int, pos_only: bool = False):
-    n, d = nbr.shape
-    valid = nbr >= 0
-    nbrs = jnp.where(valid, nbr, 0)
-    vwgt_f = vwgt.astype(jnp.float32)
-    total = vwgt_f.sum()
-    eps_abs = eps_frac * total
-    vid = jnp.arange(n, dtype=jnp.int32)
-
-    def sums(part):
-        w0 = jnp.sum(vwgt_f * (part == 0))
-        w1 = jnp.sum(vwgt_f * (part == 1))
-        ws = jnp.sum(vwgt_f * (part == 2))
-        return w0, w1, ws
-
-    def pulled_full(part):
-        """pulled_to{0,1}[v] = weight of N(v) in side {1,0} (O(n·d))."""
-        pn = part[nbrs]                                     # (n, d)
-        wn = jnp.where(valid, vwgt_f[nbrs], 0.0)
-        return (jnp.sum(wn * (pn == 1), axis=1),
-                jnp.sum(wn * (pn == 0), axis=1))
+# --------------------------------------------------------------------- #
+# device data plane
+# --------------------------------------------------------------------- #
+def _fm_pass(nbrs, valid, vwgt_f, locked, eps_abs, part, pulled0, pulled1,
+             w0, w1, ws, bpart, bws, bimb, noise, pert, max_moves,
+             pos_only: bool = False):
+    """One FM pass (a bounded sequence of moves) on a single lane."""
+    n, d = nbrs.shape
 
     def move_cond(carry):
         i, alive, *_ = carry
@@ -120,45 +115,256 @@ def _fm_single(nbr, vwgt, part_init, locked, key, eps_frac, max_moves,
         return (i + 1, ok, part, moved, pulled0, pulled1,
                 w0, w1, ws, bpart, bws, bimb)
 
-    part = part_init
+    moved = jnp.zeros(n, bool)
+    carry = (jnp.int32(0), jnp.bool_(True), part, moved, pulled0,
+             pulled1, w0, w1, ws, bpart, bws, bimb)
+    carry = jax.lax.while_loop(move_cond, move_body, carry)
+    (_, _, part, _, _, _, w0, w1, ws, bpart, bws, bimb) = carry
+    return part, w0, w1, ws, bpart, bws, bimb
+
+
+def _pulled_jnp(nbrs, valid, vwgt_f, part):
+    """pulled_to{0,1}[l, v] = weight of N(v) in side {1, 0} (O(L·n·d))."""
+    L, n, d = nbrs.shape
+    flat = nbrs.reshape(L, n * d)
+    pn = jnp.take_along_axis(part, flat, axis=1).reshape(L, n, d)
+    wn = jnp.take_along_axis(vwgt_f, flat, axis=1).reshape(L, n, d)
+    wn = jnp.where(valid, wn, 0.0)
+    return (jnp.sum(wn * (pn == 1), axis=2),
+            jnp.sum(wn * (pn == 0), axis=2))
+
+
+def _pulled_all(nbrs, valid, vwgt_f, part, gain_mode: str):
+    """Per-pass gain recompute over all lanes of a bucket.
+
+    ``pallas`` routes through the batched Mosaic gain kernel
+    (``repro.kernels.band_batch.sep_gain_multi``); ``jnp`` is the fused-XLA
+    reference (identical reduction order, so results are bit-equal).
+    """
+    if gain_mode == "pallas":
+        from repro.kernels.ops import sep_gain_batch
+        return sep_gain_batch(jnp.where(valid, nbrs, -1), vwgt_f,
+                              part.astype(jnp.int32))
+    return _pulled_jnp(nbrs, valid, vwgt_f, part)
+
+
+def gain_mode_default() -> str:
+    """FM gain-recompute backend: REPRO_FM_GAIN=jnp|pallas|auto.
+
+    ``auto`` compiles the Mosaic kernel on TPU and keeps the fused-XLA path
+    on CPU hosts (where Pallas would run in interpret mode anyway).
+    """
+    mode = os.environ.get("REPRO_FM_GAIN", "auto")
+    if mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return mode
+
+
+@functools.partial(jax.jit, static_argnames=("passes", "pos_only",
+                                             "gain_mode"))
+def fm_refine_multi(nbr, vwgt, parts_init, locked, keys, eps_frac,
+                    max_moves, n_pert, passes: int = 3,
+                    pos_only: bool = False, gain_mode: str = "jnp"):
+    """FM over a flat lane axis: any mix of (graph, instance) pairs.
+
+    Shapes (L = lanes): nbr (L, n, d) int32; vwgt (L, n); parts_init
+    (L, n) int8; locked (L, n) bool; keys (L, 2) uint32; eps_frac (L,)
+    f32; max_moves, n_pert (L,) int32.  Returns (parts, sep_w, imb) with
+    leading lane axis.  The pass loop is hoisted out of the per-lane body
+    so the O(L·n·d) gain recompute runs as ONE batched kernel per pass.
+    """
+    L, n, d = nbr.shape
+    valid = nbr >= 0
+    nbrs = jnp.where(valid, nbr, 0)
+    vwgt_f = vwgt.astype(jnp.float32)
+    total = vwgt_f.sum(axis=1)
+    eps_abs = eps_frac.astype(jnp.float32) * total
+
+    def sums(part):
+        w0 = jnp.sum(vwgt_f * (part == 0), axis=1)
+        w1 = jnp.sum(vwgt_f * (part == 1), axis=1)
+        ws = jnp.sum(vwgt_f * (part == 2), axis=1)
+        return w0, w1, ws
+
+    part = parts_init
     w0, w1, ws = sums(part)
     bpart, bws, bimb = part, ws, jnp.abs(w0 - w1)
-    pert = n_pert                       # read by move_body at trace time
+    pert = n_pert                       # perturbation active in pass 1 only
+    pass_fn = functools.partial(_fm_pass, pos_only=pos_only)
     for p in range(passes):
-        moved = jnp.zeros(n, bool)
-        key, sub = jax.random.split(key)
+        both = jax.vmap(jax.random.split)(keys)             # (L, 2, 2)
+        keys, subs = both[:, 0], both[:, 1]
         # per-pass tiebreak noise (moved-locks make per-move noise redundant)
-        noise = jax.random.uniform(sub, (2, n))
-        pulled0, pulled1 = pulled_full(part)
-        carry = (jnp.int32(0), jnp.bool_(True), part, moved, pulled0,
-                 pulled1, w0, w1, ws, bpart, bws, bimb)
-        carry = jax.lax.while_loop(move_cond, move_body, carry)
-        _, _, part, _, _, _, w0, w1, ws, bpart, bws, bimb = carry
+        noise = jax.vmap(lambda k: jax.random.uniform(k, (2, n)))(subs)
+        pulled0, pulled1 = _pulled_all(nbrs, valid, vwgt_f, part, gain_mode)
+        (part, w0, w1, ws, bpart, bws, bimb) = jax.vmap(pass_fn)(
+            nbrs, valid, vwgt_f, locked, eps_abs, part, pulled0, pulled1,
+            w0, w1, ws, bpart, bws, bimb, noise, pert, max_moves)
         part = bpart                                        # revert to best
         w0, w1, ws = sums(part)
-        pert = jnp.int32(0)                                 # 1st pass only
+        pert = jnp.zeros_like(pert)
     return bpart, bws, bimb
 
 
-@functools.partial(jax.jit, static_argnames=("passes", "pos_only"))
-def fm_refine_batch(nbr, vwgt, parts_init, locked, keys, eps_frac,
-                    max_moves, n_pert, passes: int = 3,
-                    pos_only: bool = False):
-    """vmap of FM over K perturbed instances (multi-sequential refinement)."""
-    fn = functools.partial(_fm_single, passes=passes, pos_only=pos_only)
-    return jax.vmap(fn, in_axes=(None, None, 0, None, 0, None, None, None))(
-        nbr, vwgt, parts_init, locked, keys, eps_frac, max_moves, n_pert)
+# --------------------------------------------------------------------- #
+# host work descriptors + bucketed executor
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class FMWork:
+    """One multi-instance FM refinement request (unpadded host arrays).
+
+    The pipeline stages in ``core.nd`` *yield* these instead of dispatching
+    directly; ``execute_fm_works`` pads each to its power-of-two ELL bucket
+    and runs every work sharing a bucket in a single ``fm_refine_multi``
+    dispatch (one lane per FM instance).
+    """
+    nbr: np.ndarray                     # (n, d) int32 ELL ids, -1 pad
+    vwgt: np.ndarray                    # (n,) vertex weights
+    part: np.ndarray                    # (n,) int8 initial state
+    locked: np.ndarray                  # (n,) bool
+    seed: int
+    k_inst: int = 8
+    eps_frac: float = 0.1
+    passes: int = 3
+    max_moves: Optional[int] = None
+    n_pert: int = 8
+    parts_init: Optional[np.ndarray] = None    # (K, n) distinct starts
+    pos_only: bool = False
+
+    def effective_max_moves(self) -> int:
+        n_pad = _pow2(self.nbr.shape[0])
+        max_moves = self.max_moves
+        if max_moves is None:
+            if self.parts_init is None:
+                sep_sz = int((self.part == 2).sum())
+            else:
+                sep_sz = int((np.asarray(self.parts_init) == 2).sum(1).max())
+            max_moves = 2 * sep_sz + 16
+        return min(int(max_moves), n_pad, 4096)
+
+    def bucket_key(self) -> Tuple[int, int, int, int, bool]:
+        n, d = self.nbr.shape
+        # max_moves is sub-bucketed: the vmapped move loop runs to the max
+        # trip count over its lanes, so mixing small move budgets with
+        # large ones would serialize the small lanes behind the large.
+        return (_pow2(n), _pow2(max(d, 1), 8),
+                _pow2(self.effective_max_moves(), 32),
+                self.passes, self.pos_only)
 
 
-# --------------------------------------------------------------------- #
-# host wrapper
-# --------------------------------------------------------------------- #
-def _pow2(x: int, lo: int = 64) -> int:
-    """Round up to a power of two (jit-cache friendly bucketing)."""
-    v = lo
-    while v < x:
-        v *= 2
-    return v
+@dataclasses.dataclass
+class _Lanes:
+    """One work's padded per-lane arrays (k_inst lanes)."""
+    nbr: np.ndarray                     # (k, n_pad, d_pad) — broadcast view
+    vwgt: np.ndarray
+    locked: np.ndarray
+    parts0: np.ndarray
+    keys: np.ndarray
+    eps: np.ndarray
+    max_moves: np.ndarray
+    n_pert: np.ndarray
+
+
+def _prepare_lanes(w: FMWork) -> _Lanes:
+    n, d = w.nbr.shape
+    n_pad, d_pad = w.bucket_key()[:2]
+    k_inst = _pow2(w.k_inst, 2)
+    nbr_p = -np.ones((n_pad, d_pad), np.int32)
+    nbr_p[:n, :d] = w.nbr
+    vw_p = np.zeros(n_pad, np.int32)
+    vw_p[:n] = w.vwgt
+    lock_p = np.ones(n_pad, bool)
+    lock_p[:n] = w.locked
+    if w.parts_init is None:
+        parts_init = np.broadcast_to(np.asarray(w.part, np.int8)[None, :],
+                                     (k_inst, n))
+    else:
+        parts_init = np.asarray(w.parts_init, np.int8)[
+            np.arange(k_inst) % len(w.parts_init)]
+    max_moves = w.effective_max_moves()
+    parts0 = np.full((k_inst, n_pad), 3, np.int8)
+    parts0[:, :n] = parts_init
+    keys = np.asarray(jax.random.split(jax.random.PRNGKey(w.seed), k_inst))
+    return _Lanes(
+        nbr=np.broadcast_to(nbr_p, (k_inst, n_pad, d_pad)),
+        vwgt=np.broadcast_to(vw_p, (k_inst, n_pad)),
+        locked=np.broadcast_to(lock_p, (k_inst, n_pad)),
+        parts0=parts0, keys=keys,
+        eps=np.full(k_inst, w.eps_frac, np.float32),
+        max_moves=np.full(k_inst, max_moves, np.int32),
+        n_pert=np.full(k_inst, w.n_pert, np.int32))
+
+
+def _select_best(w: FMWork, parts: np.ndarray, sep_w: np.ndarray,
+                 imb: np.ndarray) -> Tuple[np.ndarray, float, float]:
+    """Paper's selection: min separator weight among balance-feasible."""
+    total = float(np.asarray(w.vwgt).sum())
+    feas = imb <= max(w.eps_frac * total, float(imb.min()))
+    score = np.where(feas, sep_w, sep_w + total)            # infeasible last
+    best = int(np.argmin(score))
+    return parts[best], float(sep_w[best]), float(imb[best])
+
+
+def execute_fm_works(works: Sequence[FMWork],
+                     gain_mode: Optional[str] = None
+                     ) -> List[Tuple[np.ndarray, float, float]]:
+    """Run FM works, one batched dispatch per (n_pad, d_pad) bucket.
+
+    Returns, for each work in input order, the best ``(part, sep_w, imb)``
+    across its instances — exactly what ``refine_parts`` returns.  Lane
+    results do not depend on which other works share the dispatch, so this
+    is equivalent to (but much cheaper than) per-work execution.
+    """
+    if gain_mode is None:
+        gain_mode = gain_mode_default()
+    results: List[Optional[Tuple[np.ndarray, float, float]]] = \
+        [None] * len(works)
+    groups = defaultdict(list)
+    for i, w in enumerate(works):
+        groups[w.bucket_key()].append(i)
+    for (n_pad, d_pad, _mm, passes, pos_only), idxs in groups.items():
+        lanes = [_prepare_lanes(works[i]) for i in idxs]
+        counts = [ln.parts0.shape[0] for ln in lanes]
+        L_real = sum(counts)
+        # Lane padding to a multiple of 8: dead lanes still pay the vmapped
+        # move-loop body every trip, so pow2 padding would waste up to 2×.
+        L_pad = -(-L_real // 8) * 8
+        pad = L_pad - L_real
+
+        def cat(get, fill_from_first):
+            arrs = [get(ln) for ln in lanes]
+            if pad:
+                arrs.append(np.broadcast_to(get(lanes[0])[:1],
+                                            (pad,) + get(lanes[0]).shape[1:])
+                            if fill_from_first else
+                            np.zeros((pad,) + arrs[0].shape[1:],
+                                     arrs[0].dtype))
+            return np.concatenate(arrs, axis=0)
+
+        nbr_b = cat(lambda ln: ln.nbr, True)
+        vw_b = cat(lambda ln: ln.vwgt, True)
+        lock_b = cat(lambda ln: ln.locked, True)
+        parts_b = cat(lambda ln: ln.parts0, True)
+        keys_b = cat(lambda ln: ln.keys, True)
+        eps_b = cat(lambda ln: ln.eps, True)
+        mm_b = cat(lambda ln: ln.max_moves, False)  # dummies: 0 moves
+        np_b = cat(lambda ln: ln.n_pert, True)
+        parts, sep_w, imb = fm_refine_multi(
+            jnp.asarray(nbr_b), jnp.asarray(vw_b), jnp.asarray(parts_b),
+            jnp.asarray(lock_b), jnp.asarray(keys_b), jnp.asarray(eps_b),
+            jnp.asarray(mm_b), jnp.asarray(np_b), passes=passes,
+            pos_only=pos_only, gain_mode=gain_mode)
+        parts = np.asarray(parts)
+        sep_w = np.asarray(sep_w)
+        imb = np.asarray(imb)
+        off = 0
+        for i, k in zip(idxs, counts):
+            n = works[i].nbr.shape[0]
+            results[i] = _select_best(
+                works[i], parts[off:off + k, :n],
+                sep_w[off:off + k], imb[off:off + k])
+            off += k
+    return results                                           # type: ignore
 
 
 def refine_parts(nbr: np.ndarray, vwgt: np.ndarray, part: np.ndarray,
@@ -173,43 +379,14 @@ def refine_parts(nbr: np.ndarray, vwgt: np.ndarray, part: np.ndarray,
     Selection is the paper's: best refined band separator wins —
     min separator weight among balance-feasible instances.
     ``parts_init`` optionally provides a distinct initial state per instance
-    (K, n) — used by the initial-partition phase.
+    (K, n) — used by the initial-partition phase.  This is the one-work
+    convenience wrapper over ``execute_fm_works``.
     """
-    n, d = nbr.shape
-    n_pad, d_pad = _pow2(n), _pow2(d, 8)
-    k_inst = _pow2(k_inst, 2)
-    nbr_p = -np.ones((n_pad, d_pad), np.int32)
-    nbr_p[:n, :d] = nbr
-    vw_p = np.zeros(n_pad, np.int32)
-    vw_p[:n] = vwgt
-    lock_p = np.ones(n_pad, bool)
-    lock_p[:n] = locked
-    if parts_init is None:
-        parts_init = np.broadcast_to(part[None, :], (k_inst, n))
-        sep_sz = int((part == 2).sum())
-    else:
-        parts_init = np.asarray(parts_init)[
-            np.arange(k_inst) % len(parts_init)]
-        sep_sz = int((parts_init == 2).sum(1).max())
-    if max_moves is None:
-        max_moves = 2 * sep_sz + 16
-    max_moves = min(int(max_moves), n_pad, 4096)
-    parts0 = np.full((k_inst, n_pad), 3, np.int8)
-    parts0[:, :n] = parts_init
-    keys = jax.random.split(jax.random.PRNGKey(seed), k_inst)
-    parts, sep_w, imb = fm_refine_batch(
-        jnp.asarray(nbr_p), jnp.asarray(vw_p), jnp.asarray(parts0),
-        jnp.asarray(lock_p), keys, float(eps_frac),
-        jnp.int32(max_moves), jnp.int32(n_pert), passes=passes,
-        pos_only=pos_only)
-    parts = np.asarray(parts)[:, :n]
-    sep_w = np.asarray(sep_w)
-    imb = np.asarray(imb)
-    total = float(vwgt.sum())
-    feas = imb <= max(eps_frac * total, float(imb.min()))
-    score = np.where(feas, sep_w, sep_w + total)            # infeasible last
-    best = int(np.argmin(score))
-    return parts[best], float(sep_w[best]), float(imb[best])
+    work = FMWork(nbr=nbr, vwgt=vwgt, part=part, locked=locked, seed=seed,
+                  k_inst=k_inst, eps_frac=eps_frac, passes=passes,
+                  max_moves=max_moves, n_pert=n_pert, parts_init=parts_init,
+                  pos_only=pos_only)
+    return execute_fm_works([work])[0]
 
 
 def separator_is_valid(nbr: np.ndarray, part: np.ndarray) -> bool:

@@ -46,6 +46,15 @@ def grow_part(g: Graph, seed: int) -> np.ndarray:
     return part
 
 
+def initial_parts(g: Graph, seed: int, k_tries: int = 8) -> np.ndarray:
+    """Stacked greedy-growing tries (K, n) — the host half of the stage.
+
+    The FM refinement of these tries is a separate ``FMWork`` so the
+    ordering service can bucket it with work from other subproblems.
+    """
+    return np.stack([grow_part(g, seed * 1009 + k) for k in range(k_tries)])
+
+
 def initial_separator(g: Graph, seed: int, k_tries: int = 8,
                       eps_frac: float = 0.1) -> Tuple[np.ndarray, float]:
     """Best-of-K greedy+FM separator of the (small) coarsest graph.
@@ -54,7 +63,7 @@ def initial_separator(g: Graph, seed: int, k_tries: int = 8,
     fold-dup working copy).
     """
     nbr, _ = g.to_ell()
-    parts0 = np.stack([grow_part(g, seed * 1009 + k) for k in range(k_tries)])
+    parts0 = initial_parts(g, seed, k_tries)
     part, sep_w, _ = refine_parts(
         nbr, g.vwgt, parts0[0], np.zeros(g.n, bool), seed * 31,
         k_inst=k_tries, eps_frac=eps_frac, passes=3, n_pert=4,

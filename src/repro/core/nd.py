@@ -8,21 +8,33 @@ every dissection level, as in the paper's fold of induced subgraphs onto
 instance counts and the number of multi-sequential FM/initial-partition
 instances — exactly the knobs through which process count affects ordering
 quality in the paper (its Tables 2–3 vary nothing else).
+
+Since the batched-service PR the separator pipeline is *stage-separated*:
+``separator_task`` is a generator that runs the host control plane (coarsen
+→ initial separator → per-level band extract + FM) but **yields** its device
+work (``BFSWork`` / ``FMWork``) instead of dispatching it.  The sequential
+driver (``compute_separator``) executes each yielded work immediately; the
+ordering service (``repro.service``) drives many tasks breadth-first and
+executes all outstanding work of a depth as bucketed batches.  Both paths
+run identical per-work computations, so they produce identical orderings.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Generator, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.core.band import extract_band, project_band
+from repro.core.band import BFSWork, execute_bfs_works, extract_band, \
+    project_band
 from repro.core.coarsen import coarsen_multilevel
-from repro.core.fm import refine_parts, separator_is_valid
+from repro.core.fm import FMWork, execute_fm_works, separator_is_valid
 from repro.core.graph import Graph
-from repro.core.initsep import initial_separator
+from repro.core.initsep import initial_parts
 from repro.core.ordering import Ordering
 from repro.sparse.mindeg import min_degree
+
+Work = Union[BFSWork, FMWork]
 
 
 @dataclasses.dataclass
@@ -48,9 +60,17 @@ def _project(part_coarse: np.ndarray, cmap: np.ndarray) -> np.ndarray:
     return part_coarse[cmap].astype(np.int8)
 
 
-def compute_separator(g: Graph, seed: int, nproc: int, cfg: NDConfig
-                      ) -> Optional[np.ndarray]:
-    """Multilevel + band-FM vertex separator of g.  Returns part or None."""
+# ------------------------------------------------------------------ #
+# stage-separated separator pipeline
+# ------------------------------------------------------------------ #
+def separator_task(g: Graph, seed: int, nproc: int, cfg: NDConfig
+                   ) -> Generator[Work, object, Optional[np.ndarray]]:
+    """Multilevel + band-FM separator pipeline as a work-yielding generator.
+
+    Yields ``BFSWork`` / ``FMWork`` items; the driver sends back each
+    result (``np.ndarray`` dist for BFS, ``(part, sep_w, imb)`` for FM).
+    Returns the final part vector, or None when g is too small.
+    """
     if g.n < 4:
         return None
     state = coarsen_multilevel(
@@ -60,20 +80,77 @@ def compute_separator(g: Graph, seed: int, nproc: int, cfg: NDConfig
     coarsest = state.coarsest
     n_inst = state.levels[-1].n_instances
     k_init = min(cfg.k_init * n_inst, 32)
-    part, _ = initial_separator(coarsest, seed, k_tries=k_init,
-                                eps_frac=cfg.eps_frac)
+
+    # initial separator on the coarsest graph (multi-sequential tries)
+    parts0 = initial_parts(coarsest, seed, k_tries=k_init)
+    nbr_c, _ = coarsest.to_ell()
+    part, _, _ = yield FMWork(
+        nbr=nbr_c, vwgt=coarsest.vwgt, part=parts0[0],
+        locked=np.zeros(coarsest.n, bool), seed=seed * 31, k_inst=k_init,
+        eps_frac=cfg.eps_frac, passes=3, n_pert=4, parts_init=parts0)
+    assert separator_is_valid(nbr_c, part)
+
     if cfg.refine_strict:
         k_fm = 1
     else:
         k_fm = int(np.clip(nproc, 1, cfg.k_fm_cap)) if cfg.fold_dup else 1
         k_fm = max(k_fm, 2)
+    pos_only = cfg.refine_strict
+    n_pert = 0 if pos_only else 8
+
     # uncoarsen: project, band-extract, multi-sequential FM
     for lvl in range(len(state.levels) - 1, 0, -1):
         cmap = state.levels[lvl].cmap
         fine = state.levels[lvl - 1].graph
         part = _project(part, cmap)
-        part = _refine_level(fine, part, seed * 101 + lvl, k_fm, nproc, cfg)
+        lvl_seed = seed * 101 + lvl
+        if cfg.use_band:
+            nbr_f, _ = fine.to_ell()
+            dist = yield BFSWork(nbr=nbr_f, src=part == 2,
+                                 width=cfg.band_width)
+            band, bpart, locked, old_ids = extract_band(
+                fine, part, width=cfg.band_width, dist=dist)
+            nbr_b, _ = band.to_ell()
+            bpart, _, _ = yield FMWork(
+                nbr=nbr_b, vwgt=band.vwgt, part=bpart, locked=locked,
+                seed=lvl_seed, k_inst=k_fm, eps_frac=cfg.eps_frac,
+                passes=cfg.fm_passes, n_pert=n_pert, pos_only=pos_only)
+            assert separator_is_valid(nbr_b, bpart)
+            part = project_band(part, bpart, old_ids)
+        else:
+            locked = np.zeros(fine.n, bool)
+            if cfg.freeze_interface and nproc > 1:
+                locked |= _interface_frozen(fine, nproc)
+            nbr_f, _ = fine.to_ell()
+            part, _, _ = yield FMWork(
+                nbr=nbr_f, vwgt=fine.vwgt, part=part, locked=locked,
+                seed=lvl_seed, k_inst=k_fm, eps_frac=cfg.eps_frac,
+                passes=cfg.fm_passes, n_pert=n_pert, pos_only=pos_only)
+            assert separator_is_valid(nbr_f, part)
     return part
+
+
+def execute_work(work: Work):
+    """Synchronous single-work execution (the non-batched driver)."""
+    if isinstance(work, FMWork):
+        return execute_fm_works([work])[0]
+    return execute_bfs_works([work])[0]
+
+
+def compute_separator(g: Graph, seed: int, nproc: int, cfg: NDConfig
+                      ) -> Optional[np.ndarray]:
+    """Multilevel + band-FM vertex separator of g.  Returns part or None.
+
+    Drives ``separator_task`` one work at a time; the ordering service
+    drives the same generator with bucketed batch execution instead.
+    """
+    gen = separator_task(g, seed, nproc, cfg)
+    try:
+        work = next(gen)
+        while True:
+            work = gen.send(execute_work(work))
+    except StopIteration as stop:
+        return stop.value
 
 
 def _interface_frozen(g: Graph, nproc: int) -> np.ndarray:
@@ -91,32 +168,6 @@ def _interface_frozen(g: Graph, nproc: int) -> np.ndarray:
     return frozen
 
 
-def _refine_level(fine: Graph, part: np.ndarray, seed: int, k_fm: int,
-                  nproc: int, cfg: NDConfig) -> np.ndarray:
-    pos_only = cfg.refine_strict
-    n_pert = 0 if pos_only else 8
-    if cfg.use_band:
-        band, bpart, locked, old_ids = extract_band(fine, part,
-                                                    width=cfg.band_width)
-        nbr, _ = band.to_ell()
-        bpart, _, _ = refine_parts(nbr, band.vwgt, bpart, locked, seed,
-                                   k_inst=k_fm, eps_frac=cfg.eps_frac,
-                                   passes=cfg.fm_passes, n_pert=n_pert,
-                                   pos_only=pos_only)
-        assert separator_is_valid(nbr, bpart)
-        return project_band(part, bpart, old_ids)
-    locked = np.zeros(fine.n, bool)
-    if cfg.freeze_interface and nproc > 1:
-        locked |= _interface_frozen(fine, nproc)
-    nbr, _ = fine.to_ell()
-    out, _, _ = refine_parts(nbr, fine.vwgt, part, locked, seed,
-                             k_inst=k_fm, eps_frac=cfg.eps_frac,
-                             passes=cfg.fm_passes, n_pert=n_pert,
-                             pos_only=pos_only)
-    assert separator_is_valid(nbr, out)
-    return out
-
-
 def _fallback_separator(g: Graph, seed: int) -> Optional[np.ndarray]:
     from repro.core.mapping import edge_bisect
     half = edge_bisect(g, seed=seed, k_tries=2, passes=2)
@@ -127,6 +178,65 @@ def _fallback_separator(g: Graph, seed: int) -> Optional[np.ndarray]:
     return part
 
 
+# ------------------------------------------------------------------ #
+# shared ND building blocks (host recursion AND the service scheduler)
+# ------------------------------------------------------------------ #
+def leaf_perm(g: Graph, seed: int) -> np.ndarray:
+    """Order a leaf subgraph with sequential minimum degree."""
+    return min_degree(g, tie_seed=seed)
+
+
+def separator_perm(gs: Graph, seed: int) -> np.ndarray:
+    """Order the separator vertices themselves (highest indices).
+
+    Minimum degree internally (paper couples ND with MD [10]); very large
+    separators (circuit-like graphs) would stall the host MD —
+    profile-order them instead.
+    """
+    if gs.n <= 2:
+        return np.arange(gs.n, dtype=np.int64)
+    if gs.n <= 600:
+        return min_degree(gs, tie_seed=seed)
+    from repro.core.baselines import rcm
+    return rcm(gs)
+
+
+def resolve_separator(g: Graph, seed: int, part: Optional[np.ndarray],
+                      cfg: NDConfig) -> Optional[np.ndarray]:
+    """Apply the fallback policy to a (possibly degenerate) separator."""
+    if part is None or min((part == 0).sum(), (part == 1).sum()) == 0:
+        if g.n > 4 * cfg.leaf_size:
+            # separator heuristic failed on a big subgraph: fall back to a
+            # balanced edge bisection (boundary -> separator) rather than
+            # handing O(n) vertices to sequential minimum degree.
+            part = _fallback_separator(g, seed)
+        if part is None or min((part == 0).sum(), (part == 1).sum()) == 0:
+            return None
+    return part
+
+
+def split_by_separator(g: Graph, part: np.ndarray
+                       ) -> Tuple[Tuple[Graph, np.ndarray],
+                                  Tuple[Graph, np.ndarray],
+                                  Tuple[Graph, np.ndarray]]:
+    """Induced subgraphs of the two sides and the separator."""
+    return (g.induced_subgraph(part == 0),
+            g.induced_subgraph(part == 1),
+            g.induced_subgraph(part == 2))
+
+
+def effective_nproc(n: int, nproc: int, cfg: NDConfig) -> int:
+    return 1 if n <= cfg.seq_threshold else nproc
+
+
+def child_nprocs(nproc: int) -> Tuple[int, int]:
+    """Paper §3.1: part 0 onto ⌈p/2⌉ processes, part 1 onto ⌊p/2⌋."""
+    return (nproc + 1) // 2, max(nproc // 2, 1)
+
+
+# ------------------------------------------------------------------ #
+# sequential driver
+# ------------------------------------------------------------------ #
 def nested_dissection(g: Graph, seed: int = 0, nproc: int = 1,
                       cfg: Optional[NDConfig] = None) -> np.ndarray:
     """Full ordering.  Returns perm (perm[k] = vertex eliminated k-th)."""
@@ -145,8 +255,7 @@ def _nd_rec(g: Graph, gids: np.ndarray, seed: int, nproc: int, cfg: NDConfig,
             ordering: Ordering, node, start: int) -> None:
     n = g.n
     if n <= cfg.leaf_size:
-        perm = min_degree(g, tie_seed=seed)
-        ordering.add_leaf(node, start, gids[perm])
+        ordering.add_leaf(node, start, gids[leaf_perm(g, seed)])
         return
     comp = g.components()
     ncomp = int(comp.max()) + 1
@@ -159,36 +268,18 @@ def _nd_rec(g: Graph, gids: np.ndarray, seed: int, nproc: int, cfg: NDConfig,
                     child, off)
             off += sub.n
         return
-    eff_proc = 1 if n <= cfg.seq_threshold else nproc
-    part = compute_separator(g, seed, eff_proc, cfg)
-    if part is None or min((part == 0).sum(), (part == 1).sum()) == 0:
-        if n > 4 * cfg.leaf_size:
-            # separator heuristic failed on a big subgraph: fall back to a
-            # balanced edge bisection (boundary -> separator) rather than
-            # handing O(n) vertices to sequential minimum degree.
-            part = _fallback_separator(g, seed)
-        if part is None or min((part == 0).sum(), (part == 1).sum()) == 0:
-            perm = min_degree(g, tie_seed=seed)     # could not split
-            ordering.add_leaf(node, start, gids[perm])
-            return
-    g0, old0 = g.induced_subgraph(part == 0)
-    g1, old1 = g.induced_subgraph(part == 1)
-    gs, olds = g.induced_subgraph(part == 2)
-    # paper §3.1: part 0 onto ⌈p/2⌉ processes, part 1 onto ⌊p/2⌋
-    p0, p1 = (nproc + 1) // 2, max(nproc // 2, 1)
+    part = compute_separator(g, seed, effective_nproc(n, nproc, cfg), cfg)
+    part = resolve_separator(g, seed, part, cfg)
+    if part is None:
+        ordering.add_leaf(node, start, gids[leaf_perm(g, seed)])
+        return
+    (g0, old0), (g1, old1), (gs, olds) = split_by_separator(g, part)
+    p0, p1 = child_nprocs(nproc)
     c0 = ordering.add_internal(node, start, g0.n)
     _nd_rec(g0, gids[old0], seed * 2 + 1, p0, cfg, ordering, c0, start)
     c1 = ordering.add_internal(node, start + g0.n, g1.n)
     _nd_rec(g1, gids[old1], seed * 2 + 2, p1, cfg, ordering, c1,
             start + g0.n)
-    # separator ordered last (highest indices); minimum degree internally
-    # (paper couples ND with MD [10]); very large separators (circuit-like
-    # graphs) would stall the host MD — profile-order them instead.
-    if gs.n <= 2:
-        sperm = np.arange(gs.n, dtype=np.int64)
-    elif gs.n <= 600:
-        sperm = min_degree(gs, tie_seed=seed)
-    else:
-        from repro.core.baselines import rcm
-        sperm = rcm(gs)
+    # separator ordered last (highest indices)
+    sperm = separator_perm(gs, seed)
     ordering.add_leaf(node, start + g0.n + g1.n, gids[olds[sperm]], "sep")

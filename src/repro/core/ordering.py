@@ -51,6 +51,8 @@ class Ordering:
         perm = np.empty(self.n, dtype=np.int64)
         seen = 0
         for node in sorted(self._frags, key=lambda f: f.start):
+            assert node.start == seen, (
+                f"fragment at {node.start} overlaps/gaps previous end {seen}")
             perm[node.start:node.start + node.size] = node.fragment
             seen += node.size
         assert seen == self.n, f"fragments cover {seen} of {self.n}"

@@ -1,0 +1,121 @@
+"""Pallas TPU kernels for the *bucketed* ordering service (DESIGN.md §3).
+
+The service executes the separator pipeline breadth-first over every ND
+node at the same depth, so its two hot loops see a whole bucket of graphs
+at once instead of one:
+
+* ``bfs_multi``      — band-distance sweep (paper §3.3: "spreading distance
+  information from all of the separator vertices") for L graphs in one
+  launch.  Grid = (L,); each step keeps one graph's ELL tile and distance
+  vector resident in VMEM and runs all ``width`` min-plus relaxations
+  locally, instead of ``width`` HBM round-trips per graph per step.
+* ``sep_gain_multi`` — the O(n·d) separator gain recompute (``pulled``
+  weights: for each vertex, the neighbor weight it would drag into the
+  separator from either side) for all lanes of an FM bucket.  Grid =
+  (L, row-blocks); the per-lane ``part`` / ``vwgt`` vectors stay resident
+  so the neighbor gathers are VMEM-local, mirroring ``ell_spmv``.
+
+Both kernels are reduction-order identical to their jnp references
+(``repro.kernels.ref``), so CPU hosts can run the fused-XLA path while TPU
+runs Mosaic with bit-equal results.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+UNREACH = 2 ** 30                     # plain int: inlined into kernel bodies
+
+
+def _bfs_kernel(nbr_ref, src_ref, dist_ref, *, width):
+    nbr = nbr_ref[0]                          # (n, d) int32
+    src = src_ref[0] != 0                     # (n,)
+    valid = nbr >= 0
+    idx = jnp.where(valid, nbr, 0)
+    dist = jnp.where(src, 0, UNREACH).astype(jnp.int32)
+    for _ in range(width):
+        dn = jnp.where(valid,
+                       jnp.take(dist, idx.reshape(-1), axis=0
+                                ).reshape(nbr.shape),
+                       UNREACH)
+        dist = jnp.minimum(dist, jnp.min(dn, axis=1) + 1)
+    dist_ref[0] = dist
+
+
+@functools.partial(jax.jit, static_argnames=("width", "interpret"))
+def bfs_multi(nbr: jax.Array, src: jax.Array, width: int,
+              interpret: bool = True) -> jax.Array:
+    """dist[l, v] = min(distance in graph l from src_l, width+1).
+
+    Args:
+      nbr: (L, n, d) int32 ELL neighbor ids (-1 = padding).
+      src: (L, n) int32 (nonzero = source vertex).
+      width: number of relaxation steps (band half-width).
+      interpret: Python/XLA execution of the kernel body (CPU hosts).
+    """
+    L, n, d = nbr.shape
+    return pl.pallas_call(
+        functools.partial(_bfs_kernel, width=width),
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((1, n, d), lambda l: (l, 0, 0)),
+            pl.BlockSpec((1, n), lambda l: (l, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda l: (l, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, n), jnp.int32),
+        interpret=interpret,
+    )(nbr, src)
+
+
+def _gain_kernel(nbr_ref, vwgt_ref, part_ref, p0_ref, p1_ref):
+    nbr = nbr_ref[0]                          # (bn, d) int32 row tile
+    vwgt = vwgt_ref[0]                        # (n,)  f32, lane-resident
+    part = part_ref[0]                        # (n,)  int32, lane-resident
+    valid = nbr >= 0
+    idx = jnp.where(valid, nbr, 0)
+    flat = idx.reshape(-1)
+    pn = jnp.take(part, flat, axis=0).reshape(nbr.shape)
+    wn = jnp.take(vwgt, flat, axis=0).reshape(nbr.shape)
+    wn = jnp.where(valid, wn, 0.0)
+    p0_ref[0] = jnp.sum(wn * (pn == 1), axis=1)
+    p1_ref[0] = jnp.sum(wn * (pn == 0), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def sep_gain_multi(nbr: jax.Array, vwgt: jax.Array, part: jax.Array,
+                   block_rows: int = 256, interpret: bool = True):
+    """Batched separator FM gains: (pulled_to0, pulled_to1), each (L, n).
+
+    pulled_to0[l, v] = Σ vwgt[l, u] over u ∈ N(v) with part[l, u] == 1 —
+    the weight a move of v to side 0 would pull into the separator (and
+    symmetrically for side 1).  Gain of the move is vwgt[v] − pulled.
+
+    Args:
+      nbr:  (L, n, d) int32 ELL neighbor ids (-1 = padding).
+      vwgt: (L, n) float32 vertex weights (0 on padded rows).
+      part: (L, n) int32 state per vertex (0/1/2=separator/3=padding).
+    """
+    L, n, d = nbr.shape
+    bn = min(block_rows, n)
+    assert n % bn == 0, "caller pads rows to a power of two"
+    grid = (L, n // bn)
+    p0, p1 = pl.pallas_call(
+        _gain_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, d), lambda l, i: (l, i, 0)),
+            pl.BlockSpec((1, n), lambda l, i: (l, 0)),      # vwgt resident
+            pl.BlockSpec((1, n), lambda l, i: (l, 0)),      # part resident
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bn), lambda l, i: (l, i)),
+            pl.BlockSpec((1, bn), lambda l, i: (l, i)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((L, n), jnp.float32),
+                   jax.ShapeDtypeStruct((L, n), jnp.float32)],
+        interpret=interpret,
+    )(nbr, vwgt.astype(jnp.float32), part.astype(jnp.int32))
+    return p0, p1

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.band_batch import bfs_multi, sep_gain_multi
 from repro.kernels.diffusion import diffusion_step
 from repro.kernels.ell_spmv import ell_spmv
 
@@ -40,6 +41,31 @@ def spmv(nbr, val, x, block_rows: int = 256, interpret: bool | None = None):
     y = ell_spmv(nbr_p, val_p, x_p, block_rows=block_rows,
                  interpret=interpret)
     return y[:n]
+
+
+def band_bfs_batch(nbr, src, width: int, interpret: bool | None = None):
+    """Batched band-distance sweep over a bucket of ELL graphs.
+
+    nbr (L, n, d) int32 / src (L, n) bool-ish → dist (L, n) int32 clipped
+    at width+1 (UNREACH beyond).  One kernel launch for the whole bucket.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    return bfs_multi(jnp.asarray(nbr, jnp.int32),
+                     jnp.asarray(src, jnp.int32), width,
+                     interpret=interpret)
+
+
+def sep_gain_batch(nbr, vwgt, part, block_rows: int = 256,
+                   interpret: bool | None = None):
+    """Batched separator FM gain recompute (pulled weights), (L, n) pair."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = nbr.shape[1]
+    return sep_gain_multi(jnp.asarray(nbr, jnp.int32),
+                          jnp.asarray(vwgt, jnp.float32),
+                          jnp.asarray(part, jnp.int32),
+                          block_rows=min(block_rows, n), interpret=interpret)
 
 
 def diffuse(nbr, val, x, inj, steps: int = 1, dt: float = 0.25,

@@ -13,6 +13,34 @@ def ell_spmv_ref(nbr: jax.Array, val: jax.Array, x: jax.Array) -> jax.Array:
     return acc.astype(x.dtype)
 
 
+def bfs_multi_ref(nbr: jax.Array, src: jax.Array, width: int) -> jax.Array:
+    """Batched min-plus BFS relaxation (oracle for band_batch.bfs_multi)."""
+    UNREACH = jnp.int32(2 ** 30)
+    L, n, d = nbr.shape
+    valid = nbr >= 0
+    idx = jnp.where(valid, nbr, 0)
+    dist = jnp.where(src != 0, 0, UNREACH).astype(jnp.int32)
+    for _ in range(width):
+        dn = jnp.take_along_axis(dist, idx.reshape(L, n * d),
+                                 axis=1).reshape(L, n, d)
+        dn = jnp.where(valid, dn, UNREACH)
+        dist = jnp.minimum(dist, jnp.min(dn, axis=2) + 1)
+    return dist
+
+
+def sep_gain_multi_ref(nbr: jax.Array, vwgt: jax.Array, part: jax.Array):
+    """Batched pulled-weight gains (oracle for band_batch.sep_gain_multi)."""
+    L, n, d = nbr.shape
+    valid = nbr >= 0
+    flat = jnp.where(valid, nbr, 0).reshape(L, n * d)
+    pn = jnp.take_along_axis(part, flat, axis=1).reshape(L, n, d)
+    wn = jnp.take_along_axis(vwgt.astype(jnp.float32), flat,
+                             axis=1).reshape(L, n, d)
+    wn = jnp.where(valid, wn, 0.0)
+    return (jnp.sum(wn * (pn == 1), axis=2),
+            jnp.sum(wn * (pn == 0), axis=2))
+
+
 def diffusion_step_ref(nbr: jax.Array, val: jax.Array, x: jax.Array,
                        inj: jax.Array, dt: float = 0.25,
                        mu: float = 0.1) -> jax.Array:

@@ -1,0 +1,14 @@
+"""Batched ordering service (DESIGN.md §3).
+
+High-throughput front end over the PT-Scotch reproduction: a request
+queue with a graph fingerprint cache, a breadth-first nested-dissection
+scheduler, and bucketed vmap execution of all separator subproblems that
+share a padded ELL shape.
+"""
+from repro.service.api import OrderingService, OrderResult
+from repro.service.cache import FingerprintCache
+from repro.service.fingerprint import graph_fingerprint, request_fingerprint
+from repro.service.scheduler import order_batch
+
+__all__ = ["OrderingService", "OrderResult", "FingerprintCache",
+           "graph_fingerprint", "request_fingerprint", "order_batch"]

@@ -1,0 +1,164 @@
+"""Ordering service front end: submit / poll / drain / stats.
+
+Usage (see examples/serve_orderings.py):
+
+    svc = OrderingService()
+    rids = [svc.submit(g, seed=0, nproc=16) for g in graphs]
+    svc.drain()                       # one bucketed batch over the queue
+    perm = svc.poll(rids[0]).perm
+    print(svc.stats())                # hit rate, p50/p95 latency, thru-put
+
+``submit`` fingerprints the request (CSR content + seed + nproc + config);
+a cache hit resolves immediately and duplicate *pending* fingerprints are
+coalesced so each unique problem is ordered once per drain.  ``drain``
+hands all unique pending requests to the breadth-first scheduler
+(``order_batch``), which executes separator work bucketed across the whole
+queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict, deque
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.nd import NDConfig
+from repro.service.cache import FingerprintCache
+from repro.service.fingerprint import request_fingerprint
+from repro.service.scheduler import order_batch
+
+
+@dataclasses.dataclass
+class OrderResult:
+    request_id: int
+    perm: np.ndarray
+    cached: bool                    # served from the fingerprint cache
+    latency_s: float                # submit → resolve
+    fingerprint: str
+
+
+@dataclasses.dataclass
+class _PendingReq:
+    request_id: int
+    t_submit: float
+    graph: Graph
+    seed: int
+    nproc: int
+    cfg: NDConfig
+
+
+class OrderingService:
+    """Batched nested-dissection ordering service (single-process)."""
+
+    def __init__(self, cfg: Optional[NDConfig] = None,
+                 cache_capacity: int = 1024,
+                 result_capacity: int = 4096,
+                 latency_window: int = 4096):
+        self.default_cfg = cfg or NDConfig()
+        self.cache = FingerprintCache(cache_capacity)
+        self._next_rid = 0
+        # resolved results are retained FIFO-bounded: a long-running
+        # service must not grow per served request (perms live on in the
+        # LRU cache; old request ids just stop polling successfully)
+        self._result_capacity = result_capacity
+        self._results: "OrderedDict[int, OrderResult]" = OrderedDict()
+        self._pending: Dict[str, list] = {}
+        self._latencies: deque = deque(maxlen=latency_window)
+        self._n_submitted = 0
+        self._n_computed = 0
+        self._drain_time_s = 0.0
+        self._n_drained = 0
+
+    # ------------------------------------------------------------------ #
+    def submit(self, g: Graph, seed: int = 0, nproc: int = 1,
+               cfg: Optional[NDConfig] = None) -> int:
+        """Enqueue an ordering request; returns a request id.
+
+        Cache hits resolve immediately (poll right away); misses resolve
+        at the next ``drain``.
+        """
+        cfg = cfg or self.default_cfg
+        rid = self._next_rid
+        self._next_rid += 1
+        self._n_submitted += 1
+        t0 = time.perf_counter()
+        fp = request_fingerprint(g, seed, nproc, cfg)
+        perm = self.cache.get(fp)
+        if perm is not None:
+            self._resolve(rid, perm, True, t0, fp)
+            return rid
+        req = _PendingReq(rid, t0, g, seed, nproc, cfg)
+        self._pending.setdefault(fp, []).append(req)
+        return rid
+
+    def poll(self, rid: int) -> Optional[OrderResult]:
+        """Result for a request id, or None while still queued."""
+        return self._results.get(rid)
+
+    def queue_depth(self) -> int:
+        return sum(len(v) for v in self._pending.values())
+
+    # ------------------------------------------------------------------ #
+    def drain(self) -> Dict[int, OrderResult]:
+        """Order every queued request in one bucketed batch.
+
+        Duplicate fingerprints are computed once and fanned out.  Returns
+        {request_id: OrderResult} for the requests resolved by this call.
+        """
+        if not self._pending:
+            return {}
+        pending, self._pending = self._pending, {}
+        fps = list(pending)
+        heads = [pending[fp][0] for fp in fps]
+        t0 = time.perf_counter()
+        perms = order_batch([r.graph for r in heads],
+                            [r.seed for r in heads],
+                            [r.nproc for r in heads],
+                            [r.cfg for r in heads])
+        dt = time.perf_counter() - t0
+        resolved: Dict[int, OrderResult] = {}
+        n_resolved = 0
+        for fp, perm in zip(fps, perms):
+            self.cache.put(fp, perm)
+            for k, req in enumerate(pending[fp]):
+                res = self._resolve(req.request_id, perm, k > 0,
+                                    req.t_submit, fp)
+                resolved[req.request_id] = res
+                n_resolved += 1
+        self._n_computed += len(fps)
+        self._drain_time_s += dt
+        self._n_drained += n_resolved
+        return resolved
+
+    # ------------------------------------------------------------------ #
+    def stats(self) -> Dict[str, float]:
+        """Service counters: dedup/cache effectiveness, latency, throughput."""
+        lat = np.asarray(list(self._latencies)) if self._latencies else \
+            np.zeros(1)
+        return {
+            "requests": self._n_submitted,
+            "computed": self._n_computed,
+            "cache_hits": self.cache.hits,
+            "cache_hit_rate": round(self.cache.hit_rate, 4),
+            "cache_size": len(self.cache),
+            "queue_depth": self.queue_depth(),
+            "p50_latency_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+            "p95_latency_ms": round(float(np.percentile(lat, 95)) * 1e3, 3),
+            "orderings_per_sec": round(
+                self._n_drained / self._drain_time_s, 3)
+                if self._drain_time_s else 0.0,
+        }
+
+    # ------------------------------------------------------------------ #
+    def _resolve(self, rid: int, perm: np.ndarray, cached: bool,
+                 t_submit: float, fp: str) -> OrderResult:
+        lat = time.perf_counter() - t_submit
+        res = OrderResult(rid, perm, cached, lat, fp)
+        self._results[rid] = res
+        while len(self._results) > self._result_capacity:
+            self._results.popitem(last=False)
+        self._latencies.append(lat)
+        return res

@@ -1,0 +1,61 @@
+"""Bucketed execution of outstanding pipeline work (DESIGN.md §3).
+
+``run_works`` takes the mixed list of device-work items that a wave of
+separator tasks is blocked on, splits it by kind, and hands each kind to
+its bucketed executor: ``execute_fm_works`` / ``execute_bfs_works`` group
+by padded ELL shape and run ONE vmapped dispatch per bucket.  Per-lane
+results are independent of batch composition, so driving N subproblems
+through here is result-identical to driving them one at a time — just with
+O(bucket) fewer dispatches.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+from repro.core.band import BFSWork, execute_bfs_works
+from repro.core.fm import FMWork, execute_fm_works
+
+
+def run_works(works: Sequence[object]) -> List[object]:
+    """Execute a heterogeneous batch of works; results in input order."""
+    fm_idx = [i for i, w in enumerate(works) if isinstance(w, FMWork)]
+    bfs_idx = [i for i, w in enumerate(works) if isinstance(w, BFSWork)]
+    assert len(fm_idx) + len(bfs_idx) == len(works), "unknown work kind"
+    out: Dict[int, object] = {}
+    if fm_idx:
+        for i, res in zip(fm_idx,
+                          execute_fm_works([works[i] for i in fm_idx])):
+            out[i] = res
+    if bfs_idx:
+        for i, res in zip(bfs_idx,
+                          execute_bfs_works([works[i] for i in bfs_idx])):
+            out[i] = res
+    return [out[i] for i in range(len(works))]
+
+
+def drive_tasks(generators: Sequence) -> List[object]:
+    """Drive work-yielding generators in lockstep waves.
+
+    Each round gathers the current outstanding work of every live
+    generator, executes it bucketed, and resumes them.  Generators finish
+    at different depths (different multilevel level counts); the wave
+    simply shrinks.  Returns each generator's return value, in order.
+    """
+    results: Dict[int, object] = {}
+    pending: Dict[int, object] = {}
+    for i, gen in enumerate(generators):
+        try:
+            pending[i] = next(gen)
+        except StopIteration as stop:
+            results[i] = stop.value
+    while pending:
+        idxs = sorted(pending)
+        outs = run_works([pending[i] for i in idxs])
+        nxt: Dict[int, object] = {}
+        for i, res in zip(idxs, outs):
+            try:
+                nxt[i] = generators[i].send(res)
+            except StopIteration as stop:
+                results[i] = stop.value
+        pending = nxt
+    return [results[i] for i in range(len(generators))]

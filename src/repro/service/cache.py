@@ -1,0 +1,53 @@
+"""LRU fingerprint cache: CSR content hash → finished ordering."""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional
+
+import numpy as np
+
+
+class FingerprintCache:
+    """Bounded LRU mapping request fingerprints to permutations.
+
+    Values are stored read-only (the same ordering may be handed to many
+    requesters); hit/miss/eviction counters feed the service stats.
+    """
+
+    def __init__(self, capacity: int = 1024):
+        assert capacity > 0
+        self.capacity = capacity
+        self._d: "OrderedDict[str, np.ndarray]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._d
+
+    def get(self, key: str) -> Optional[np.ndarray]:
+        val = self._d.get(key)
+        if val is None:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return val
+
+    def put(self, key: str, perm: np.ndarray) -> None:
+        perm = np.asarray(perm)
+        perm.setflags(write=False)
+        if key in self._d:
+            self._d.move_to_end(key)
+        self._d[key] = perm
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0

@@ -1,0 +1,36 @@
+"""Content fingerprints for ordering requests.
+
+A request is fully determined by (CSR graph content, seed, nproc, NDConfig),
+so a collision-resistant hash of exactly those bytes is a sound cache key:
+two requests with equal fingerprints produce identical orderings (the whole
+pipeline is deterministic given the seed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+from repro.core.graph import Graph
+from repro.core.nd import NDConfig
+
+
+def graph_fingerprint(g: Graph) -> str:
+    """Hash of the CSR content (structure + vertex/edge weights)."""
+    h = hashlib.blake2b(digest_size=16)
+    for arr in (g.xadj, g.adjncy, g.vwgt, g.adjwgt):
+        # dtype + shape delimiters make the encoding injective: without
+        # them, two different boundary splits of the same byte stream
+        # could collide and the cache would serve a wrong ordering.
+        h.update(f"{arr.dtype}:{arr.shape}|".encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def request_fingerprint(g: Graph, seed: int, nproc: int,
+                        cfg: NDConfig) -> str:
+    """Cache key for a full ordering request."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(graph_fingerprint(g).encode())
+    h.update(f"|seed={seed}|nproc={nproc}|".encode())
+    h.update(repr(dataclasses.astuple(cfg)).encode())
+    return h.hexdigest()

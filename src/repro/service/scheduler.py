@@ -1,0 +1,138 @@
+"""Breadth-first nested dissection over many graphs at once (DESIGN.md §3).
+
+``core.nd`` recurses depth-first through one ND tree, dispatching each
+subproblem's kernels on its own.  The scheduler instead keeps a *frontier*
+of ND nodes across ALL submitted graphs and walks the trees level by
+level: every node at the current depth that needs a separator contributes
+its pipeline generator, and ``drive_tasks`` executes each wave of
+outstanding BFS/FM work as bucketed vmap batches.  The left/right
+subgraphs of every dissection are independent (paper §3.1) — exactly the
+parallelism the paper spreads over processes, here spread over the lanes
+of a batched kernel dispatch.
+
+Work items run the same computation whether batched or not, and the tree
+bookkeeping mirrors ``core.nd._nd_rec`` exactly (same seeds, same fold
+arithmetic, same fallbacks) — so ``order_batch`` returns permutations
+identical to looped ``nested_dissection`` calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.nd import (NDConfig, child_nprocs, effective_nproc,
+                           leaf_perm, resolve_separator, separator_perm,
+                           separator_task, split_by_separator)
+from repro.core.ordering import Ordering
+from repro.service.batch import drive_tasks
+
+
+@dataclasses.dataclass
+class _Node:
+    """One pending ND tree node of one request."""
+    req: int                        # request index
+    g: Graph
+    gids: np.ndarray
+    seed: int
+    nproc: int
+    node: object                    # OrderNode receiving this subtree
+    start: int
+
+
+def _as_list(x, n: int) -> list:
+    if isinstance(x, (list, tuple)):
+        assert len(x) == n
+        return list(x)
+    return [x] * n
+
+
+def order_batch(graphs: Sequence[Graph],
+                seeds: Union[int, Sequence[int]] = 0,
+                nprocs: Union[int, Sequence[int]] = 1,
+                cfgs: Union[NDConfig, Sequence[NDConfig], None] = None
+                ) -> List[np.ndarray]:
+    """Order many graphs with bucketed breadth-first nested dissection.
+
+    Returns one permutation per graph, identical to
+    ``[nested_dissection(g, seed, nproc, cfg) for ...]``.
+    """
+    from repro.util import enable_compile_cache
+    enable_compile_cache()
+    n_req = len(graphs)
+    seeds = _as_list(seeds, n_req)
+    nprocs = _as_list(nprocs, n_req)
+    cfgs = _as_list(cfgs or NDConfig(), n_req)
+    orderings = [Ordering(g.n) for g in graphs]
+
+    frontier: List[_Node] = [
+        _Node(i, g, np.arange(g.n, dtype=np.int64), seeds[i], nprocs[i],
+              orderings[i].root, 0)
+        for i, g in enumerate(graphs)]
+
+    while frontier:
+        splitters: List[_Node] = []
+        # --- host-plane wave: leaves and component splits (cheap, serial)
+        work_list = list(frontier)
+        while work_list:
+            t = work_list.pop()
+            cfg = cfgs[t.req]
+            ordering = orderings[t.req]
+            if t.g.n <= cfg.leaf_size:
+                ordering.add_leaf(t.node, t.start,
+                                  t.gids[leaf_perm(t.g, t.seed)])
+                continue
+            comp = t.g.components()
+            ncomp = int(comp.max()) + 1
+            if ncomp > 1:               # independent parts: no separator
+                off = t.start
+                for c in range(ncomp):
+                    sub, old = t.g.induced_subgraph(comp == c)
+                    child = ordering.add_internal(t.node, off, sub.n)
+                    work_list.append(_Node(t.req, sub, t.gids[old],
+                                           t.seed * 7 + c, t.nproc,
+                                           child, off))
+                    off += sub.n
+                continue
+            splitters.append(t)
+
+        # --- device-plane wave: every separator at this depth, bucketed
+        gens = [separator_task(t.g, t.seed,
+                               effective_nproc(t.g.n, t.nproc, cfgs[t.req]),
+                               cfgs[t.req])
+                for t in splitters]
+        parts = drive_tasks(gens)
+
+        # --- split into the next depth's frontier
+        nxt: List[_Node] = []
+        for t, part in zip(splitters, parts):
+            cfg = cfgs[t.req]
+            ordering = orderings[t.req]
+            part = resolve_separator(t.g, t.seed, part, cfg)
+            if part is None:            # could not split
+                ordering.add_leaf(t.node, t.start,
+                                  t.gids[leaf_perm(t.g, t.seed)])
+                continue
+            (g0, old0), (g1, old1), (gs, olds) = \
+                split_by_separator(t.g, part)
+            p0, p1 = child_nprocs(t.nproc)
+            c0 = ordering.add_internal(t.node, t.start, g0.n)
+            nxt.append(_Node(t.req, g0, t.gids[old0], t.seed * 2 + 1, p0,
+                             c0, t.start))
+            c1 = ordering.add_internal(t.node, t.start + g0.n, g1.n)
+            nxt.append(_Node(t.req, g1, t.gids[old1], t.seed * 2 + 2, p1,
+                             c1, t.start + g0.n))
+            sperm = separator_perm(gs, t.seed)
+            ordering.add_leaf(t.node, t.start + g0.n + g1.n,
+                              t.gids[olds[sperm]], "sep")
+        frontier = nxt
+
+    perms = []
+    for g, ordering in zip(graphs, orderings):
+        perm = ordering.assemble()
+        assert np.array_equal(np.sort(perm), np.arange(g.n)), \
+            "not a permutation"
+        perms.append(perm)
+    return perms

@@ -1,6 +1,7 @@
 """shard_map halo exchange + distributed BFS, run in a subprocess with 8
 host devices (keeps the main test process at 1 device)."""
 import json
+import os
 import subprocess
 import sys
 import textwrap
@@ -49,10 +50,14 @@ SCRIPT = textwrap.dedent("""
 
 
 def test_spmd_halo_and_bfs():
+    # Pin the backend: without JAX_PLATFORMS the child process probes for
+    # accelerator plugins, which can hang far longer than the compute.
     res = subprocess.run([sys.executable, "-c", SCRIPT],
                          capture_output=True, text=True, timeout=300,
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                              "HOME": "/root",
+                              "JAX_PLATFORMS": os.environ.get(
+                                  "JAX_PLATFORMS", "cpu")})
     assert res.returncode == 0, res.stderr[-2000:]
     out = json.loads(res.stdout.strip().splitlines()[-1])
     assert out["halo"], "halo exchange mismatch"

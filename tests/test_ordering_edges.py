@@ -1,0 +1,96 @@
+"""Edge cases: Ordering.assemble fragment bookkeeping and extract_band
+anchor weighting when one side of the separator is empty."""
+import numpy as np
+import pytest
+
+from repro.core.band import extract_band, project_band
+from repro.core.fm import separator_is_valid
+from repro.core.ordering import Ordering
+from repro.graphs import generators as G
+
+
+# ------------------------------------------------------------------ #
+# Ordering.assemble
+# ------------------------------------------------------------------ #
+def test_assemble_single_fragment():
+    o = Ordering(5)
+    o.add_leaf(o.root, 0, np.array([4, 2, 0, 1, 3]))
+    assert np.array_equal(o.assemble(), [4, 2, 0, 1, 3])
+
+
+def test_assemble_multi_fragment_by_start():
+    o = Ordering(6)
+    n0 = o.add_internal(o.root, 0, 3)
+    o.add_leaf(o.root, 3, np.array([1, 5, 0]), "sep")   # added out of order
+    o.add_leaf(n0, 0, np.array([2, 4, 3]))
+    assert np.array_equal(o.assemble(), [2, 4, 3, 1, 5, 0])
+
+
+def test_assemble_rejects_overlapping_fragments():
+    o = Ordering(5)
+    o.add_leaf(o.root, 0, np.array([0, 1, 2]))
+    o.add_leaf(o.root, 2, np.array([3, 4]))            # overlaps index 2
+    with pytest.raises(AssertionError, match="overlap"):
+        o.assemble()
+
+
+def test_assemble_rejects_gap():
+    o = Ordering(6)
+    o.add_leaf(o.root, 0, np.array([0, 1]))
+    o.add_leaf(o.root, 4, np.array([2, 3]))            # hole at 2..3
+    with pytest.raises(AssertionError):
+        o.assemble()
+
+
+# ------------------------------------------------------------------ #
+# extract_band anchors
+# ------------------------------------------------------------------ #
+def _column_sep(nx, ny, col):
+    """Vertical separator at x == col on an nx×ny grid."""
+    part = np.zeros(nx * ny, np.int8)
+    xs = np.arange(nx * ny).reshape(nx, ny)
+    part[xs[col + 1:].ravel()] = 1
+    part[xs[col].ravel()] = 2
+    return part
+
+
+def test_extract_band_anchor_weights_balance():
+    g = G.grid2d(20, 8)
+    part = _column_sep(20, 8, 9)
+    band, bpart, locked, old = extract_band(g, part, width=2)
+    assert band.vwgt.sum() == g.total_vwgt()           # anchors absorb rest
+    assert bpart[-2] == 0 and bpart[-1] == 1
+    assert locked[-2:].all() and not locked[:-2].any()
+
+
+def test_extract_band_one_side_empty():
+    """Separator at the boundary: side 1 has no out-of-band weight (and at
+    width≥nx no out-of-band vertices at all on either side)."""
+    g = G.grid2d(12, 6)
+    part = _column_sep(12, 6, 10)                      # side 1 = one column
+    band, bpart, locked, old = extract_band(g, part, width=3)
+    # side-1 column is entirely within the band: its anchor weight is 0
+    assert band.vwgt[-1] == 0
+    # side-0 anchor carries exactly the out-of-band side-0 weight
+    in_band = np.zeros(g.n, bool)
+    in_band[old[old >= 0]] = True
+    assert band.vwgt[-2] == g.vwgt[~in_band & (part == 0)].sum()
+    # total weight is still conserved through the anchors
+    assert band.vwgt.sum() == g.total_vwgt()
+    # band graph is a usable FM input: projection keeps a valid separator
+    nbr, _ = g.to_ell()
+    full = project_band(part, bpart, old)
+    assert separator_is_valid(nbr, full)
+    assert np.array_equal(full, part)                  # unrefined round-trip
+
+
+def test_extract_band_empty_side_isolated_anchor():
+    """A part vector with NO side-1 vertices: anchor 1 ends up isolated
+    with zero weight, and the band build must not crash."""
+    g = G.grid2d(8, 8)
+    part = np.zeros(g.n, np.int8)
+    part[-8:] = 2                                      # last row separator
+    band, bpart, locked, old = extract_band(g, part, width=2)
+    assert band.vwgt[-1] == 0                          # empty side-1 anchor
+    assert bpart[-1] == 1 and locked[-1]
+    assert band.vwgt.sum() == g.total_vwgt()
