@@ -1,0 +1,103 @@
+"""Distributed nested dissection: OPC parity vs the host driver and
+wall-clock across virtual device counts.
+
+Needs multiple host devices; when the current process has fewer than 8 it
+re-execs itself in a subprocess with ``XLA_FLAGS=
+--xla_force_host_platform_device_count=8`` (the flag must be set before
+jax initializes).  Emits ``BENCH_dnd.json``:
+
+  * per-graph OPC of ``distributed_nested_dissection`` on 8 shards vs host
+    ``nested_dissection`` at nproc=8 (same seed) — the mean ratio is
+    asserted ≤ 1.05 (the tracked quality-parity bound);
+  * wall-clock of the distributed driver on 1 / 2 / 4 / 8 virtual devices
+    (CPU shard_map collectives: this tracks dispatch overhead trends, not
+    real-accelerator speedup).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+DEVICE_COUNTS = (1, 2, 4, 8)
+
+
+def _reexec_with_devices() -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-m", "benchmarks.dnd_bench"],
+                         env=env)
+    if res.returncode:
+        raise SystemExit(res.returncode)
+
+
+def workload():
+    from benchmarks.common import quick
+    from repro.graphs import generators as G
+    if quick():
+        return {"grid2d-24": G.grid2d(24, 24),
+                "grid3d-9": G.grid3d(9, 9, 9)}
+    return {"grid2d-48": G.grid2d(48, 48),
+            "grid3d-12": G.grid3d(12, 12, 12),
+            "rgg2d-3000": G.rgg2d(3000, seed=2)}
+
+
+def main() -> None:
+    import jax
+    if len(jax.devices()) < max(DEVICE_COUNTS):
+        _reexec_with_devices()
+        return
+    import numpy as np
+    from benchmarks.common import row
+    from repro.core.dgraph import distribute
+    from repro.core.dnd import distributed_nested_dissection
+    from repro.core.nd import nested_dissection
+    from repro.sparse.symbolic import nnz_opc
+    from repro.util import enable_compile_cache
+    enable_compile_cache()
+
+    graphs = workload()
+    per_graph = {}
+    wall = {p: 0.0 for p in DEVICE_COUNTS}
+    ratios = []
+    for name, g in graphs.items():
+        perm_h = nested_dissection(g, seed=0, nproc=8)
+        opc_h = nnz_opc(g, perm_h)[1]
+        entry = {"n": g.n, "opc_host": opc_h}
+        for p in DEVICE_COUNTS:
+            dg = distribute(g, p)
+            t0 = time.perf_counter()
+            perm_d = distributed_nested_dissection(dg, seed=0)
+            dt = time.perf_counter() - t0
+            wall[p] += dt
+            entry[f"t_p{p}_s"] = round(dt, 3)
+            if p == max(DEVICE_COUNTS):
+                opc_d = nnz_opc(g, perm_d)[1]
+                entry["opc_dnd"] = opc_d
+                entry["opc_ratio"] = round(opc_d / opc_h, 4)
+                ratios.append(opc_d / opc_h)
+        per_graph[name] = entry
+        row(f"dnd/{name}", entry[f"t_p8_s"] * 1e6,
+            n=g.n, opc_ratio=entry["opc_ratio"],
+            **{f"t_p{p}": entry[f"t_p{p}_s"] for p in DEVICE_COUNTS})
+
+    ratio_mean = float(np.mean(ratios))
+    out = {
+        "graphs": per_graph,
+        "wallclock_s": {str(p): round(wall[p], 3) for p in DEVICE_COUNTS},
+        "opc_ratio_mean": round(ratio_mean, 4),
+    }
+    with open("BENCH_dnd.json", "w") as f:
+        json.dump(out, f, indent=2)
+    row("dnd/opc_ratio_mean", 0.0, ratio=round(ratio_mean, 4))
+    assert ratio_mean <= 1.05, (
+        f"distributed ND mean OPC ratio {ratio_mean:.3f} > 1.05 vs host")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,9 @@ from repro.graphs import generators as G
 
 
 def mem_per_process(g, p: int, fold_threshold: int = 100) -> float:
-    dg = distribute(g, p)
+    # bucket=False: this models the mesh/ghost structure itself; pow2
+    # jit-cache padding would turn the memory curve into a step function
+    dg = distribute(g, p, bucket=False)
     # 4-byte ids + weights for local ELL, plus ghost value arrays
     base = dg.nbr_gst[0].size * 8 + dg.ghost_gid.shape[1] * 8
     # multilevel pyramid: geometric ~2x, fold-dup adds a copy per fold level

@@ -18,6 +18,7 @@ MODULES = [
     ("folddup", "benchmarks.folddup_ablation"),
     ("kernel", "benchmarks.kernel_bench"),
     ("service", "benchmarks.service_bench"),
+    ("dnd", "benchmarks.dnd_bench"),
 ]
 
 

@@ -35,12 +35,10 @@ UNREACH = np.int32(2 ** 30)
 @functools.partial(jax.jit, static_argnames=("width",))
 def bfs_distance(nbr: jax.Array, src_mask: jax.Array, width: int) -> jax.Array:
     """dist[v] = min(graph distance to src, width+1), by width relaxations."""
-    valid = nbr >= 0
-    nbrs = jnp.where(valid, nbr, 0)
+    from repro.kernels.ops import ell_relax_step
     dist = jnp.where(src_mask, 0, UNREACH).astype(jnp.int32)
     for _ in range(width):
-        dn = jnp.where(valid, dist[nbrs], UNREACH)
-        dist = jnp.minimum(dist, jnp.min(dn, axis=1) + 1)
+        dist = jnp.minimum(dist, ell_relax_step(nbr, dist, UNREACH))
     return dist
 
 

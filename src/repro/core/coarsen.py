@@ -24,22 +24,15 @@ import numpy as np
 
 from repro.core.graph import Graph
 from repro.core.matching import heavy_edge_matching
-
-
-def _bucket(x: int, mult: int = 64) -> int:
-    """Round up to a power of two (pads ELL shapes so jit caches are reused)."""
-    v = mult
-    while v < x:
-        v *= 2
-    return v
+from repro.util import pow2
 
 
 def match_graph(g: Graph, seed: int, rounds: int = 8) -> np.ndarray:
     """Heavy-edge matching of g via the JAX kernel (padded ELL)."""
     dmax = int(g.degrees().max()) if g.n else 1
     nbr, wgt = g.to_ell(dmax)
-    n_pad = _bucket(g.n)
-    d_pad = _bucket(dmax, 8)
+    n_pad = pow2(g.n)
+    d_pad = pow2(dmax, 8)
     nbr_p = -np.ones((n_pad, d_pad), dtype=np.int32)
     wgt_p = np.zeros((n_pad, d_pad), dtype=np.int32)
     nbr_p[:g.n, :dmax] = nbr
@@ -47,7 +40,10 @@ def match_graph(g: Graph, seed: int, rounds: int = 8) -> np.ndarray:
     m = heavy_edge_matching(jax.numpy.asarray(nbr_p), jax.numpy.asarray(wgt_p),
                             jax.random.PRNGKey(seed), rounds=rounds)
     m = np.asarray(m)[:g.n]
-    return np.minimum(m, g.n - 1)  # padded ids cannot appear; safety clamp
+    # Mask out-of-range ids (padded lanes) back to self-match: clamping to
+    # n-1 would silently merge the vertex onto real vertex n-1.
+    bad = (m < 0) | (m >= g.n)
+    return np.where(bad, np.arange(g.n, dtype=m.dtype), m)
 
 
 def coarsen_once(g: Graph, match: np.ndarray):
@@ -69,6 +65,20 @@ def coarsen_once(g: Graph, match: np.ndarray):
     cg = Graph.from_edges(nc, np.stack([cs[keep], cd[keep]], 1),
                           vwgt=cvwgt, ewgt=g.adjwgt[keep])
     return cg, cmap
+
+
+def coarse_vtxdist(fine_vtxdist: np.ndarray, match: np.ndarray) -> np.ndarray:
+    """Coarse ownership ranges for a shard-distributed coarsening step.
+
+    Each coarse vertex lives on the owner of its representative (the min
+    endpoint of its matched pair, as in ``coarsen_once``).  Unique reps in
+    ascending order are already grouped by owner — vtxdist ranges are sorted
+    — so the ``coarsen_once`` numbering keeps coarse ids shard-contiguous
+    and the coarse vtxdist is a rank query of the fine boundaries.
+    """
+    rep = np.minimum(np.arange(len(match)), match)
+    reps = np.unique(rep)
+    return np.searchsorted(reps, np.asarray(fine_vtxdist)).astype(np.int64)
 
 
 @dataclasses.dataclass

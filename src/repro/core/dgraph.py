@@ -6,9 +6,11 @@ The paper's structure maps onto JAX as stacked per-shard arrays with a
   * ``vtxdist``      — the paper's ``procvrttab``: global vertex ranges per
     shard (duplicated everywhere, owner lookup by range search);
   * ``nbr_gst``      — the paper's ``edgegsttab``: ELL adjacency in *compact
-    local indexing* where indices < n_loc are local and indices ≥ n_loc
-    address the ghost slots, numbered by (owner, global id) — the
+    local indexing* where indices < n_loc_max are local and indices ≥
+    n_loc_max address the ghost slots, numbered by (owner, global id) — the
     cache-friendly agglomeration order of §2.1;
+  * ``ewgt_gst``     — matching ELL edge weights (heavy-edge matching on
+    coarse levels needs them);
   * ``ghost_gid``    — global ids of ghost slots per shard (the receive
     manifest of the halo exchange).
 
@@ -17,6 +19,12 @@ neighboring shards: the reference implementation is an ``all_gather`` over
 the parts axis + gather (dense collective — the TPU-idiomatic replacement
 for MPI point-to-point; DESIGN.md §2 discusses the trade).
 
+All device functions take the per-graph arrays (``vtxdist``, ``ghost_gid``,
+…) as *traced arguments* and are cached per padded shape, so the jit cache
+is shared across every subgraph of a nested-dissection recursion that lands
+in the same power-of-two bucket (same bucketing the centralized data plane
+uses, ``repro.util.pow2``).
+
 Scalability note (matching the paper): no shard stores ghost *adjacency* —
 only ghost values — so per-shard memory is O(local arcs).
 """
@@ -24,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +41,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.graph import Graph
+from repro.core.matching import hash_mix, hash_unit
+from repro.util import pow2
 
 
 @dataclasses.dataclass
@@ -40,6 +50,7 @@ class DGraph:
     """Host-resident description of a P-way distributed graph."""
     vtxdist: np.ndarray        # (P+1,) global ranges
     nbr_gst: np.ndarray        # (P, n_loc_max, dmax) compact local/ghost ids
+    ewgt_gst: np.ndarray       # (P, n_loc_max, dmax) edge weights (0 pad)
     ghost_gid: np.ndarray      # (P, n_ghost_max) global ids of ghosts (-1 pad)
     n_loc: np.ndarray          # (P,) real local counts
     n_ghost: np.ndarray        # (P,) real ghost counts
@@ -53,77 +64,172 @@ class DGraph:
     def n_loc_max(self) -> int:
         return self.nbr_gst.shape[1]
 
+    @property
+    def n_global(self) -> int:
+        return int(self.vtxdist[-1])
 
-def distribute(g: Graph, nparts: int) -> DGraph:
-    """Block-distribute a host graph (the paper's user-defined ranges)."""
+
+def distribute(g: Graph, nparts: int,
+               vtxdist: Optional[np.ndarray] = None,
+               bucket: bool = True) -> DGraph:
+    """Distribute a host graph (the paper's user-defined ranges).
+
+    ``vtxdist`` optionally supplies custom ownership ranges (the coarse
+    graphs of distributed coarsening keep coarse vertices on the owner of
+    their representative); the default is a block distribution.  With
+    ``bucket`` the padded shard shapes are rounded up to powers of two so
+    jitted collectives are reused across same-bucket subgraphs.
+    """
     n = g.n
-    vtxdist = np.linspace(0, n, nparts + 1).astype(np.int64)
+    if vtxdist is None:
+        vtxdist = np.linspace(0, n, nparts + 1).astype(np.int64)
+    else:
+        vtxdist = np.asarray(vtxdist, dtype=np.int64)
+        assert len(vtxdist) == nparts + 1 and vtxdist[-1] == n
     n_loc = np.diff(vtxdist)
-    n_loc_max = int(n_loc.max())
+    n_loc_max = int(n_loc.max()) if nparts else 1
     deg = g.degrees()
-    dmax = int(deg.max()) if n else 1
+    dmax = int(deg.max()) if n and len(g.adjncy) else 1
+    if bucket:
+        n_loc_max = pow2(max(n_loc_max, 1), 8)
+        dmax = pow2(max(dmax, 1), 4)
+    n_loc_max = max(n_loc_max, 1)
+
     owner = np.searchsorted(vtxdist, np.arange(n), side="right") - 1
+    src = np.repeat(np.arange(n, dtype=np.int64), deg)
+    dst = g.adjncy.astype(np.int64)
+    p_src = owner[src]
+    col = np.arange(len(dst)) - g.xadj[src]
+    li_src = src - vtxdist[p_src]
+    remote = p_src != owner[dst]
+
+    # ghost manifests: unique (shard, gid) pairs among remote arc heads.
+    # Ascending gid is ascending (owner, gid) because vtxdist is sorted —
+    # the §2.1 cache-friendly agglomeration order.
+    keys = p_src[remote] * np.int64(max(n, 1)) + dst[remote]
+    uk = np.unique(keys)
+    gp = uk // max(n, 1)
+    ggid = uk % max(n, 1)
+    counts = np.bincount(gp, minlength=nparts)
+    offs = np.concatenate([[0], np.cumsum(counts)])
+    gslot = np.arange(len(uk)) - offs[gp]
+    n_ghost = counts.astype(np.int64)
+    n_ghost_max = max(int(n_ghost.max()) if nparts else 0, 1)
+    if bucket:
+        n_ghost_max = pow2(n_ghost_max, 4)
+    ghost_gid = -np.ones((nparts, n_ghost_max), dtype=np.int64)
+    ghost_gid[gp, gslot] = ggid
 
     nbr_gst = -np.ones((nparts, n_loc_max, dmax), dtype=np.int32)
-    ghost_lists = []
-    for p in range(nparts):
-        lo, hi = vtxdist[p], vtxdist[p + 1]
-        ghosts = {}
-        for li, v in enumerate(range(lo, hi)):
-            nbrs = g.neighbors(v)
-            for j, u in enumerate(nbrs):
-                if lo <= u < hi:
-                    nbr_gst[p, li, j] = u - lo
-                else:
-                    ghosts.setdefault(int(u), None)
-        # ghost numbering: ascending (owner process, global id) — §2.1
-        glist = sorted(ghosts, key=lambda u: (owner[u], u))
-        gidx = {u: n_loc_max + k for k, u in enumerate(glist)}
-        for li, v in enumerate(range(lo, hi)):
-            for j, u in enumerate(g.neighbors(v)):
-                if not (lo <= u < hi):
-                    nbr_gst[p, li, j] = gidx[int(u)]
-        ghost_lists.append(np.array(glist, dtype=np.int64))
-    n_ghost = np.array([len(x) for x in ghost_lists])
-    n_ghost_max = max(int(n_ghost.max()), 1)
-    ghost_gid = -np.ones((nparts, n_ghost_max), dtype=np.int64)
-    for p, gl in enumerate(ghost_lists):
-        ghost_gid[p, :len(gl)] = gl
+    ewgt_gst = np.zeros((nparts, n_loc_max, dmax), dtype=np.int32)
+    cidx = dst - vtxdist[owner[dst]]
+    if len(uk):
+        cidx[remote] = n_loc_max + gslot[np.searchsorted(uk, keys)]
+    nbr_gst[p_src, li_src, col] = cidx
+    ewgt_gst[p_src, li_src, col] = g.adjwgt
+
     vwgt = np.zeros((nparts, n_loc_max), dtype=np.int64)
-    for p in range(nparts):
-        lo, hi = vtxdist[p], vtxdist[p + 1]
-        vwgt[p, :hi - lo] = g.vwgt[lo:hi]
-    return DGraph(vtxdist, nbr_gst, ghost_gid, n_loc, n_ghost, vwgt)
+    vwgt[owner, np.arange(n) - vtxdist[owner]] = g.vwgt
+    return DGraph(vtxdist, nbr_gst, ewgt_gst, ghost_gid, n_loc, n_ghost,
+                  vwgt)
 
 
+@functools.lru_cache(maxsize=None)
 def make_parts_mesh(nparts: int) -> Mesh:
     devs = jax.devices()[:nparts]
+    assert len(devs) == nparts, (
+        f"need {nparts} devices, have {len(jax.devices())} "
+        "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     return Mesh(np.array(devs), ("parts",))
 
 
-def halo_exchange_fn(dg: DGraph, mesh: Mesh):
-    """Returns jitted halo(x (P, n_loc_max)) -> (P, n_loc_max + n_ghost_max).
+# ------------------------------------------------------------------ #
+# sharded <-> flat host vectors
+# ------------------------------------------------------------------ #
+def shard_vector(dg: DGraph, x: np.ndarray, fill=0) -> np.ndarray:
+    """Flat global (n,) -> sharded (P, n_loc_max) (padding = fill)."""
+    out = np.full((dg.nparts, dg.n_loc_max), fill, dtype=np.asarray(x).dtype)
+    for p in range(dg.nparts):
+        lo, hi = dg.vtxdist[p], dg.vtxdist[p + 1]
+        out[p, :hi - lo] = x[lo:hi]
+    return out
 
-    Reference path: all_gather of owned slabs + gather by global id.
+
+def unshard_vector(dg: DGraph, xs: np.ndarray) -> np.ndarray:
+    """Sharded (P, n_loc_max) -> flat global (n,)."""
+    return np.concatenate([xs[p, :dg.vtxdist[p + 1] - dg.vtxdist[p]]
+                           for p in range(dg.nparts)])
+
+
+def to_host(dg: DGraph) -> Graph:
+    """Gather the distributed structure back into one centralized Graph.
+
+    The §3.1 centralization step: below the sequential threshold the
+    subgraph is gathered onto one process and ordered there.
     """
-    vtxdist = jnp.asarray(dg.vtxdist)
-    ghost_gid = jnp.asarray(dg.ghost_gid)          # (P, G)
-    n_loc_max = dg.n_loc_max
+    Pn, nlm, d = dg.nbr_gst.shape
+    p, li, slot = np.nonzero(dg.nbr_gst >= 0)
+    c = dg.nbr_gst[p, li, slot]
+    src = dg.vtxdist[p] + li
+    loc = c < nlm
+    dst = np.empty(len(c), dtype=np.int64)
+    dst[loc] = dg.vtxdist[p[loc]] + c[loc]
+    dst[~loc] = dg.ghost_gid[p[~loc], c[~loc] - nlm]
+    w = dg.ewgt_gst[p, li, slot]
+    keep = src < dst                      # one direction; from_edges mirrors
+    vwgt = unshard_vector(dg, dg.vwgt)
+    return Graph.from_edges(dg.n_global,
+                            np.stack([src[keep], dst[keep]], 1),
+                            vwgt=vwgt, ewgt=w[keep].astype(np.int64))
 
-    def body(x, gids):
-        # x: (1, n_loc_max) this shard's values; gids: (1, G)
-        allx = jax.lax.all_gather(x[0], "parts")    # (P, n_loc_max)
-        owner = jnp.searchsorted(vtxdist, gids[0], side="right") - 1
-        local = gids[0] - vtxdist[owner]
-        vals = allx[owner, local]
-        vals = jnp.where(gids[0] >= 0, vals, 0)
-        return jnp.concatenate([x[0], vals])[None]
+
+# ------------------------------------------------------------------ #
+# halo exchange
+# ------------------------------------------------------------------ #
+def _halo_local(x, gids, vtxdist):
+    """Per-shard halo body: all_gather owned slabs + gather by global id.
+
+    ``x`` (n_loc_max,) this shard's values; returns (n_loc_max + G,).
+    Shared by the standalone halo fn, the BFS sweep and the matching
+    protocol (all run inside ``shard_map`` over the parts axis).
+    """
+    allx = jax.lax.all_gather(x, "parts")               # (P, n_loc_max)
+    owner = jnp.clip(jnp.searchsorted(vtxdist, gids, side="right") - 1,
+                     0, allx.shape[0] - 1)
+    local = jnp.clip(gids - vtxdist[owner], 0, allx.shape[1] - 1)
+    vals = jnp.where(gids >= 0, allx[owner, local], 0)
+    return jnp.concatenate([x, vals])
+
+
+@functools.lru_cache(maxsize=None)
+def _halo_jit(nparts: int, n_loc_max: int, n_ghost_max: int, dtype: str):
+    mesh = make_parts_mesh(nparts)
+
+    def body(x, gids, vtxdist):
+        return _halo_local(x[0], gids[0], vtxdist)[None]
 
     fn = shard_map(body, mesh=mesh,
-                   in_specs=(P("parts", None), P("parts", None)),
+                   in_specs=(P("parts", None), P("parts", None), P(None)),
                    out_specs=P("parts", None))
-    gids = jnp.asarray(ghost_gid)
-    return jax.jit(lambda x: fn(x, gids))
+    return jax.jit(fn)
+
+
+def halo_exchange_fn(dg: DGraph):
+    """Returns halo(x (P, n_loc_max)) -> (P, n_loc_max + n_ghost_max).
+
+    The underlying jitted collective is cached per (nparts, padded shapes,
+    dtype) and takes the ghost manifest / ranges as traced arguments, so it
+    is reused by every same-bucket graph.
+    """
+    gids = jnp.asarray(dg.ghost_gid, jnp.int32)
+    vtxdist = jnp.asarray(dg.vtxdist, jnp.int32)
+
+    def halo(x):
+        x = jnp.asarray(x)
+        fn = _halo_jit(dg.nparts, dg.n_loc_max, dg.ghost_gid.shape[1],
+                       str(x.dtype))
+        return fn(x, gids, vtxdist)
+    return halo
 
 
 def halo_reference(dg: DGraph, x: np.ndarray) -> np.ndarray:
@@ -142,25 +248,157 @@ def halo_reference(dg: DGraph, x: np.ndarray) -> np.ndarray:
     return out
 
 
-def distributed_bfs(dg: DGraph, mesh: Mesh, src_mask: np.ndarray,
+# ------------------------------------------------------------------ #
+# distributed band-BFS
+# ------------------------------------------------------------------ #
+@functools.lru_cache(maxsize=None)
+def _bfs_jit(nparts: int, n_loc_max: int, dmax: int, n_ghost_max: int,
+             width: int):
+    from repro.kernels.ops import ell_relax_step
+    mesh = make_parts_mesh(nparts)
+
+    def body(nbr, src, gids, vtxdist):
+        nbr, src, gids = nbr[0], src[0], gids[0]
+        BIG = jnp.int32(2 ** 30)
+        dist = jnp.where(src != 0, 0, BIG).astype(jnp.int32)
+
+        def step(dist, _):
+            ext = _halo_local(dist, gids, vtxdist)
+            return jnp.minimum(dist, ell_relax_step(nbr, ext, BIG)), None
+
+        dist, _ = jax.lax.scan(step, dist, None, length=width)
+        return dist[None]
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P("parts", None, None), P("parts", None),
+                             P("parts", None), P(None)),
+                   out_specs=P("parts", None))
+    return jax.jit(fn)
+
+
+def distributed_bfs(dg: DGraph, src_mask: np.ndarray,
                     width: int) -> np.ndarray:
     """Band-graph distance sweep (§3.3) on the distributed structure: one
     halo exchange per relaxation — the paper's 'spreading distance
     information from all of the separator vertices, using our halo exchange
     routine'."""
-    halo = halo_exchange_fn(dg, mesh)
-    nbr = jnp.asarray(np.where(dg.nbr_gst >= 0, dg.nbr_gst, 0))
-    valid = jnp.asarray(dg.nbr_gst >= 0)
-    BIG = jnp.int32(2 ** 30)
-    dist = jnp.where(jnp.asarray(src_mask), 0, BIG).astype(jnp.int32)
-
-    @jax.jit
-    def relax(dist):
-        ext = halo(dist)                            # (P, n_loc+G)
-        pidx = jnp.arange(ext.shape[0])[:, None, None]
-        dn = jnp.where(valid, ext[pidx, nbr], BIG)
-        return jnp.minimum(dist, dn.min(axis=-1) + 1)
-
-    for _ in range(width):
-        dist = relax(dist)
+    fn = _bfs_jit(dg.nparts, dg.n_loc_max, dg.nbr_gst.shape[2],
+                  dg.ghost_gid.shape[1], width)
+    dist = fn(jnp.asarray(dg.nbr_gst), jnp.asarray(src_mask, jnp.int32),
+              jnp.asarray(dg.ghost_gid, jnp.int32),
+              jnp.asarray(dg.vtxdist, jnp.int32))
     return np.asarray(dist)
+
+
+# ------------------------------------------------------------------ #
+# distributed heavy-edge matching (paper §3.2)
+# ------------------------------------------------------------------ #
+@functools.lru_cache(maxsize=None)
+def _matching_jit(nparts: int, n_loc_max: int, dmax: int, n_ghost_max: int,
+                  rounds: int):
+    mesh = make_parts_mesh(nparts)
+    INT_MAX = jnp.iinfo(jnp.int32).max
+
+    def body(nbr, ew, gids, vtxdist, nloc, seed):
+        nbr, ew, gids, nloc = nbr[0], ew[0], gids[0], nloc[0]
+        pidx = jax.lax.axis_index("parts")
+        lo = vtxdist[pidx]
+        li = jnp.arange(n_loc_max, dtype=jnp.int32)
+        valid_loc = li < nloc
+        my_gid = jnp.where(valid_loc, lo + li, -1)
+        ext_gid = jnp.concatenate([my_gid, gids])       # (n_loc_max + G,)
+        valid_e = nbr >= 0
+        nb = jnp.where(valid_e, nbr, 0)
+        ewf = ew.astype(jnp.float32)
+        # proposer gid of every (shard, row) of the gathered proposal
+        # buffers; every shard can compute it from vtxdist alone
+        prop_gid_flat = (vtxdist[:nparts, None]
+                         + jnp.arange(n_loc_max, dtype=jnp.int32)[None, :]
+                         ).reshape(-1)
+
+        def round_fn(match, r):
+            unmatched = (match < 0) & valid_loc
+            ext_unm = _halo_local(unmatched.astype(jnp.int32), gids,
+                                  vtxdist) != 0
+            # hash coin: any shard can evaluate any vertex's side locally
+            is_prop_ext = (hash_mix(ext_gid, r, seed) & 1) == 1
+            # --- propose: heaviest unmatched acceptor neighbor
+            tgt_slots = ext_gid[nb]                     # (n_loc_max, d)
+            cand = (valid_e & ext_unm[nb] & ~is_prop_ext[nb]
+                    & (tgt_slots >= 0))
+            tie = hash_unit(my_gid[:, None], tgt_slots, r + 17)
+            score = jnp.where(cand, ewf + tie, -jnp.inf)
+            slot = jnp.argmax(score, axis=1)
+            has = jnp.any(cand, axis=1) & unmatched & is_prop_ext[:n_loc_max]
+            prop_tgt = jnp.where(has, tgt_slots[li, slot], -1)
+            prop_w = jnp.where(has, ewf[li, slot], 0.0)
+
+            # --- grant: every shard grants for its own local acceptors
+            allt = jax.lax.all_gather(prop_tgt, "parts").reshape(-1)
+            allw = jax.lax.all_gather(prop_w, "parts").reshape(-1)
+            mine = (allt >= lo) & (allt < lo + nloc)
+            seg = jnp.where(mine, allt - lo, n_loc_max)
+            gsc = allw + hash_unit(prop_gid_flat, allt, r + 31)
+            gsc = jnp.where(mine, gsc, -jnp.inf)
+            best = jax.ops.segment_max(gsc, seg,
+                                       num_segments=n_loc_max + 1)
+            is_best = mine & (gsc >= best[seg])
+            winner = jax.ops.segment_min(
+                jnp.where(is_best, prop_gid_flat, INT_MAX), seg,
+                num_segments=n_loc_max + 1)[:n_loc_max]
+            can_accept = unmatched & ~is_prop_ext[:n_loc_max]
+            grant = jnp.where(can_accept & (winner < INT_MAX), winner, -1)
+
+            # --- notify: proposers read their target's grant
+            allg = jax.lax.all_gather(grant, "parts")   # (P, n_loc_max)
+            tsafe = jnp.maximum(prop_tgt, 0)
+            owner_t = jnp.clip(
+                jnp.searchsorted(vtxdist, tsafe, side="right") - 1,
+                0, nparts - 1)
+            loc_t = jnp.clip(tsafe - vtxdist[owner_t], 0, n_loc_max - 1)
+            got = (prop_tgt >= 0) & (allg[owner_t, loc_t] == my_gid)
+            match = jnp.where(got, prop_tgt, match)
+            match = jnp.where(grant >= 0, grant, match)
+            return match, None
+
+        match0 = jnp.full((n_loc_max,), -1, dtype=jnp.int32)
+        match, _ = jax.lax.scan(round_fn, match0,
+                                jnp.arange(rounds, dtype=jnp.int32))
+        return match[None]
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P("parts", None, None), P("parts", None, None),
+                             P("parts", None), P(None), P("parts"), P(None)),
+                   out_specs=P("parts", None))
+    return jax.jit(fn)
+
+
+def distributed_matching(dg: DGraph, seed: int, rounds: int = 8
+                         ) -> np.ndarray:
+    """Synchronous probabilistic heavy-edge matching across shards.
+
+    The paper's request/grant protocol (§3.2) with the collectives of this
+    file: each round, unmatched proposers pick their heaviest unmatched
+    acceptor neighbor (ghosts included, via halo exchange of the unmatched
+    mask); proposals are gathered; every shard grants the best proposal for
+    each of its local acceptors; grants are gathered back and both ends
+    commit.  Coin flips and tiebreaks are hashes of (gid, round, seed), so
+    every shard evaluates any vertex's state without extra messages.
+
+    Returns the matching as a flat global (n,) array with match[v] = v for
+    singletons — same contract as ``matching.heavy_edge_matching``.
+    """
+    fn = _matching_jit(dg.nparts, dg.n_loc_max, dg.nbr_gst.shape[2],
+                       dg.ghost_gid.shape[1], rounds)
+    m = fn(jnp.asarray(dg.nbr_gst), jnp.asarray(dg.ewgt_gst, jnp.int32),
+           jnp.asarray(dg.ghost_gid, jnp.int32),
+           jnp.asarray(dg.vtxdist, jnp.int32),
+           jnp.asarray(dg.n_loc, jnp.int32),
+           jnp.asarray([seed & 0x7FFFFFFF], jnp.int32))
+    mg = unshard_vector(dg, np.asarray(m)).astype(np.int64)
+    v = np.arange(dg.n_global, dtype=np.int64)
+    mg = np.where((mg < 0) | (mg >= dg.n_global), v, mg)
+    # defensive symmetry repair (protocol is symmetric by construction)
+    bad = mg[mg] != v
+    mg[bad] = v[bad]
+    return mg

@@ -1,0 +1,272 @@
+"""Distributed nested dissection (paper §3) on the sharded DGraph layer.
+
+End-to-end pipeline for ordering a *distributed* graph: the top levels of
+the ND tree run directly on the sharded representation —
+
+  * **distributed multilevel coarsening** — heavy-edge matching over the
+    parts mesh (``dgraph.distributed_matching``: propose/grant rounds with
+    halo exchange of the unmatched mask), coarse-graph build on the host
+    control plane with coarse vertices kept on their representative's owner
+    (``coarsen.coarse_vtxdist``), so successive levels stay shard-aligned;
+  * **fold-dup** (§3.2) — once the average vertex count per process drops
+    below ``fold_threshold``, the process group *actually splits*: each
+    half receives a duplicate of the current coarse graph redistributed
+    over its own parts, and the halves run fully independent multilevel
+    instances; the best projected separator wins when the groups rejoin;
+  * **multi-sequential band refinement** (§3.3) — the separator projected
+    onto each fine level is band-extracted with a *distributed* BFS (one
+    halo exchange per width step), the small band graph is centralized, and
+    ``k`` FM lanes (``fm_refine_multi``) refine perturbed copies, the best
+    one being projected back;
+  * **centralize threshold** (§3.1) — subtrees whose subgraphs fall below
+    ``centralize_threshold`` are gathered and handed, all together, to the
+    ordering service's breadth-first scheduler (``service.scheduler``),
+    which executes their BFS/FM work as bucketed batches across every
+    deferred subtree at once.
+
+The host recursion / device data-plane split follows DESIGN.md §2; §4
+documents this pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.band import extract_band, project_band
+from repro.core.coarsen import coarse_vtxdist, coarsen_once
+from repro.core.dgraph import (DGraph, distribute, distributed_bfs,
+                               distributed_matching, shard_vector, to_host,
+                               unshard_vector)
+from repro.core.fm import refine_parts, separator_is_valid
+from repro.core.graph import Graph
+from repro.core.initsep import initial_parts
+from repro.core.nd import (NDConfig, child_nprocs, child_seeds,
+                           component_seed, compute_separator,
+                           resolve_separator, separator_perm,
+                           split_by_separator)
+from repro.core.ordering import Ordering
+from repro.util import mix_seeds
+
+
+@dataclasses.dataclass
+class DNDConfig(NDConfig):
+    """NDConfig + the distributed-pipeline knobs."""
+    centralize_threshold: int = 256     # below: gather + defer to scheduler
+    match_rounds: int = 8               # distributed matching rounds
+    min_reduction: float = 0.97         # coarsening stall bound
+
+
+@dataclasses.dataclass
+class _Deferred:
+    """One centralized subtree, ordered later by the batched scheduler."""
+    g: Graph
+    gids: np.ndarray
+    seed: int
+    nproc: int
+    node: object
+    start: int
+
+
+# ------------------------------------------------------------------ #
+# separator quality (best-projected-separator-wins selection)
+# ------------------------------------------------------------------ #
+def _eval_part(g: Graph, part: np.ndarray, eps_frac: float
+               ) -> Tuple[float, float, float]:
+    """(score, sep_w, imb): min separator weight among balance-feasible."""
+    w0 = float(g.vwgt[part == 0].sum())
+    w1 = float(g.vwgt[part == 1].sum())
+    ws = float(g.vwgt[part == 2].sum())
+    imb = abs(w0 - w1)
+    total = w0 + w1 + ws
+    score = ws if imb <= eps_frac * total else ws + total
+    return score, ws, imb
+
+
+# ------------------------------------------------------------------ #
+# distributed multilevel separator
+# ------------------------------------------------------------------ #
+def _band_refine_level(g: Graph, dg: DGraph, part: np.ndarray, seed: int,
+                       p_cur: int, cfg: DNDConfig) -> np.ndarray:
+    """§3.3 at one distributed level: sharded BFS + multi-sequential FM.
+
+    The distance sweep runs on the sharded structure (one halo exchange
+    per width step); the band graph it selects is small (O(n^{2/3}) for
+    meshes), so it is centralized and refined by k perturbed FM lanes —
+    the best lane's separator is projected back.
+    """
+    # lane count mirrors nd.separator_task's non-strict path: one FM lane
+    # per process of the group under fold-dup (p_cur >= 2 here — folded
+    # instances go through compute_separator), else the host floor of 2
+    k_fm = int(np.clip(p_cur, 2, cfg.k_fm_cap)) if cfg.fold_dup else 2
+    if not cfg.use_band:
+        nbr_f, _ = g.to_ell()
+        part2, _, _ = refine_parts(
+            nbr_f, g.vwgt, part, np.zeros(g.n, bool), mix_seeds(seed, 7),
+            k_inst=k_fm, eps_frac=cfg.eps_frac, passes=cfg.fm_passes,
+            n_pert=8)
+        assert separator_is_valid(nbr_f, part2)
+        return part2
+    dist_sh = distributed_bfs(dg, shard_vector(dg, part == 2),
+                              cfg.band_width)
+    dist = unshard_vector(dg, dist_sh)
+    band, bpart, locked, old_ids = extract_band(
+        g, part, width=cfg.band_width, dist=dist)
+    nbr_b, _ = band.to_ell()
+    bpart, _, _ = refine_parts(
+        nbr_b, band.vwgt, bpart, locked, mix_seeds(seed, 7), k_inst=k_fm,
+        eps_frac=cfg.eps_frac, passes=cfg.fm_passes, n_pert=8)
+    assert separator_is_valid(nbr_b, bpart)
+    return project_band(part, bpart, old_ids)
+
+
+def _coarsest_separator(g: Graph, seed: int, cfg: DNDConfig
+                        ) -> Optional[np.ndarray]:
+    """Initial separator on a (centralized) coarsest graph."""
+    if g.n < 4:
+        return None
+    parts0 = initial_parts(g, seed, k_tries=min(cfg.k_init, 32))
+    nbr, _ = g.to_ell()
+    part, _, _ = refine_parts(
+        nbr, g.vwgt, parts0[0], np.zeros(g.n, bool), mix_seeds(seed, 0),
+        k_inst=len(parts0), eps_frac=cfg.eps_frac, passes=3, n_pert=4,
+        parts_init=parts0)
+    assert separator_is_valid(nbr, part)
+    return part
+
+
+def _dsep(g: Graph, dg: Optional[DGraph], p_cur: int, seed: int,
+          cfg: DNDConfig, inst_budget: int) -> Optional[np.ndarray]:
+    """Multilevel separator of g, distributed over p_cur parts.
+
+    Returns the refined part vector of g (0/1/2) or None when degenerate.
+    ``inst_budget`` caps the fold-dup instance tree (paper: "resort to
+    folding only when ... reaches some minimum threshold" — here also a
+    memory cap, mirroring ``coarsen_multilevel``'s ``max_instances``).
+    """
+    if p_cur <= 1:
+        # a fully-folded instance: one process, the sequential pipeline
+        return compute_separator(g, seed, 1, cfg)
+    if g.n <= cfg.coarse_target:
+        return _coarsest_separator(g, seed, cfg)
+
+    if cfg.fold_dup and g.n / p_cur < cfg.fold_threshold and inst_budget >= 2:
+        # fold-dup: the group splits; each half holds a duplicate of g
+        # redistributed over its own parts and runs an independent
+        # multilevel instance.  Best projected separator wins (§3.2).
+        pa, pb = child_nprocs(p_cur)
+        sa, sb = mix_seeds(seed, 11), mix_seeds(seed, 12)
+        cand: List[np.ndarray] = []
+        for p_half, s_half in ((pa, sa), (pb, sb)):
+            dg_half = distribute(g, p_half) if p_half > 1 else None
+            part = _dsep(g, dg_half, p_half, s_half, cfg, inst_budget // 2)
+            if part is not None:
+                cand.append(part)
+        if not cand:
+            return None
+        best = min(cand, key=lambda p: _eval_part(g, p, cfg.eps_frac)[0])
+        # the rejoined group refines the winning duplicate's separator at
+        # the fold level with its full complement of FM lanes (§3.3)
+        if dg is None:
+            dg = distribute(g, p_cur)
+        return _band_refine_level(g, dg, best, mix_seeds(seed, 13), p_cur,
+                                  cfg)
+
+    if dg is None:
+        dg = distribute(g, p_cur)
+    match = distributed_matching(dg, mix_seeds(seed, 5), cfg.match_rounds)
+    cg, cmap = coarsen_once(g, match)
+    if cg.n > g.n * cfg.min_reduction:          # stalled coarsening
+        return _coarsest_separator(g, seed, cfg)
+    # coarse vertices stay on their representative's owner: the coarse
+    # level is shard-aligned without moving any vertex between shards
+    cvtx = coarse_vtxdist(dg.vtxdist, match)
+    cdg = distribute(cg, p_cur, vtxdist=cvtx)
+    part_c = _dsep(cg, cdg, p_cur, mix_seeds(seed, 101), cfg, inst_budget)
+    if part_c is None:
+        return None
+    part = part_c[cmap].astype(np.int8)
+    return _band_refine_level(g, dg, part, seed, p_cur, cfg)
+
+
+def distributed_separator(g: Graph, dg: DGraph, seed: int, nproc: int,
+                          cfg: DNDConfig) -> Optional[np.ndarray]:
+    """Top-level entry: separator of a distributed graph."""
+    if g.n < 4:
+        return None
+    return _dsep(g, dg, nproc, seed, cfg, max(cfg.k_fm_cap, 1))
+
+
+# ------------------------------------------------------------------ #
+# distributed ND driver
+# ------------------------------------------------------------------ #
+def distributed_nested_dissection(dg: DGraph, seed: int = 0,
+                                  cfg: Optional[DNDConfig] = None
+                                  ) -> np.ndarray:
+    """Full ordering of a distributed graph.  Returns perm.
+
+    The top levels dissect on the sharded representation; subtrees below
+    ``cfg.centralize_threshold`` are gathered and ordered *together* by the
+    service scheduler's bucketed breadth-first executor, so the sequential
+    endgame of every branch shares its kernel dispatches.
+    """
+    from repro.service.scheduler import order_batch
+    from repro.util import enable_compile_cache
+    enable_compile_cache()
+    cfg = cfg or DNDConfig()
+    g = to_host(dg)
+    ordering = Ordering(g.n)
+    deferred: List[_Deferred] = []
+    _dnd_rec(g, dg, np.arange(g.n, dtype=np.int64), seed, dg.nparts, cfg,
+             ordering, ordering.root, 0, deferred)
+    if deferred:
+        perms = order_batch([d.g for d in deferred],
+                            [d.seed for d in deferred],
+                            [d.nproc for d in deferred],
+                            [cfg] * len(deferred))
+        for d, perm in zip(deferred, perms):
+            ordering.add_leaf(d.node, d.start, d.gids[perm])
+    perm = ordering.assemble()
+    assert np.array_equal(np.sort(perm), np.arange(g.n)), "not a permutation"
+    return perm
+
+
+def _dnd_rec(g: Graph, dg: Optional[DGraph], gids: np.ndarray, seed: int,
+             nparts: int, cfg: DNDConfig, ordering: Ordering, node,
+             start: int, deferred: List[_Deferred]) -> None:
+    n = g.n
+    if nparts <= 1 or n <= max(cfg.centralize_threshold, cfg.leaf_size):
+        # §3.1 centralization: the subtree is sequential from here; defer
+        # it so all deferred subtrees batch through the scheduler at once
+        deferred.append(_Deferred(g, gids, seed, nparts, node, start))
+        return
+    comp = g.components()
+    ncomp = int(comp.max()) + 1
+    if ncomp > 1:                       # independent parts: no separator
+        off = start
+        for c in range(ncomp):
+            sub, old = g.induced_subgraph(comp == c)
+            child = ordering.add_internal(node, off, sub.n)
+            _dnd_rec(sub, None, gids[old], component_seed(seed, c), nparts,
+                     cfg, ordering, child, off, deferred)
+            off += sub.n
+        return
+    if dg is None:
+        dg = distribute(g, nparts)
+    part = distributed_separator(g, dg, seed, nparts, cfg)
+    part = resolve_separator(g, seed, part, cfg)
+    if part is None:
+        deferred.append(_Deferred(g, gids, seed, 1, node, start))
+        return
+    (g0, old0), (g1, old1), (gs, olds) = split_by_separator(g, part)
+    p0, p1 = child_nprocs(nparts)
+    s0, s1 = child_seeds(seed)
+    c0 = ordering.add_internal(node, start, g0.n)
+    _dnd_rec(g0, None, gids[old0], s0, p0, cfg, ordering, c0, start,
+             deferred)
+    c1 = ordering.add_internal(node, start + g0.n, g1.n)
+    _dnd_rec(g1, None, gids[old1], s1, p1, cfg, ordering, c1,
+             start + g0.n, deferred)
+    sperm = separator_perm(gs, seed)
+    ordering.add_leaf(node, start + g0.n + g1.n, gids[olds[sperm]], "sep")

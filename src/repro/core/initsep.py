@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core.graph import Graph
 from repro.core.fm import refine_parts, separator_is_valid
+from repro.util import mix_seeds
 
 
 def grow_part(g: Graph, seed: int) -> np.ndarray:
@@ -65,7 +66,7 @@ def initial_separator(g: Graph, seed: int, k_tries: int = 8,
     nbr, _ = g.to_ell()
     parts0 = initial_parts(g, seed, k_tries)
     part, sep_w, _ = refine_parts(
-        nbr, g.vwgt, parts0[0], np.zeros(g.n, bool), seed * 31,
+        nbr, g.vwgt, parts0[0], np.zeros(g.n, bool), mix_seeds(seed, 0),
         k_inst=k_tries, eps_frac=eps_frac, passes=3, n_pert=4,
         parts_init=parts0)
     assert separator_is_valid(nbr, part)

@@ -27,6 +27,39 @@ import numpy as np
 INT_MAX = jnp.iinfo(jnp.int32).max
 
 
+# --------------------------------------------------------------------- #
+# deterministic protocol hashes (shared with the distributed matcher)
+# --------------------------------------------------------------------- #
+def hash_u32(x: jax.Array) -> jax.Array:
+    """Avalanche hash (lowbias32) on uint32 arrays.
+
+    The distributed request/grant protocol (``dgraph.distributed_matching``)
+    derives coin flips and tiebreaks from ``(gid, round, seed)`` hashes so
+    any shard can evaluate any vertex's state without communication.
+    """
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_mix(*xs) -> jax.Array:
+    """Chain ``hash_u32`` over several (broadcastable) integer arrays."""
+    h = jnp.uint32(0x9E3779B9)
+    for x in xs:
+        h = hash_u32(h ^ (jnp.asarray(x).astype(jnp.uint32)
+                          * jnp.uint32(0x85EBCA6B) + jnp.uint32(1)))
+    return h
+
+
+def hash_unit(*xs) -> jax.Array:
+    """Deterministic uniform tiebreak in [0, 1)."""
+    return hash_mix(*xs).astype(jnp.float32) * jnp.float32(2.0 ** -32)
+
+
 @functools.partial(jax.jit, static_argnames=("rounds",))
 def heavy_edge_matching(nbr: jax.Array, wgt: jax.Array, key: jax.Array,
                         rounds: int = 8) -> jax.Array:

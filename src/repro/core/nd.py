@@ -33,6 +33,7 @@ from repro.core.graph import Graph
 from repro.core.initsep import initial_parts
 from repro.core.ordering import Ordering
 from repro.sparse.mindeg import min_degree
+from repro.util import mix_seeds
 
 Work = Union[BFSWork, FMWork]
 
@@ -86,8 +87,9 @@ def separator_task(g: Graph, seed: int, nproc: int, cfg: NDConfig
     nbr_c, _ = coarsest.to_ell()
     part, _, _ = yield FMWork(
         nbr=nbr_c, vwgt=coarsest.vwgt, part=parts0[0],
-        locked=np.zeros(coarsest.n, bool), seed=seed * 31, k_inst=k_init,
-        eps_frac=cfg.eps_frac, passes=3, n_pert=4, parts_init=parts0)
+        locked=np.zeros(coarsest.n, bool), seed=mix_seeds(seed, 0),
+        k_inst=k_init, eps_frac=cfg.eps_frac, passes=3, n_pert=4,
+        parts_init=parts0)
     assert separator_is_valid(nbr_c, part)
 
     if cfg.refine_strict:
@@ -103,7 +105,7 @@ def separator_task(g: Graph, seed: int, nproc: int, cfg: NDConfig
         cmap = state.levels[lvl].cmap
         fine = state.levels[lvl - 1].graph
         part = _project(part, cmap)
-        lvl_seed = seed * 101 + lvl
+        lvl_seed = mix_seeds(seed, lvl)
         if cfg.use_band:
             nbr_f, _ = fine.to_ell()
             dist = yield BFSWork(nbr=nbr_f, src=part == 2,
@@ -234,6 +236,20 @@ def child_nprocs(nproc: int) -> Tuple[int, int]:
     return (nproc + 1) // 2, max(nproc // 2, 1)
 
 
+def child_seeds(seed: int) -> Tuple[int, int]:
+    """Seeds of the two dissection children (splitmix over the node path).
+
+    Shared by the sequential driver, the service scheduler, and the
+    distributed driver so all three stay ordering-identical.
+    """
+    return mix_seeds(seed, 1), mix_seeds(seed, 2)
+
+
+def component_seed(seed: int, c: int) -> int:
+    """Seed of the c-th connected component of a node."""
+    return mix_seeds(seed, 3 + c)
+
+
 # ------------------------------------------------------------------ #
 # sequential driver
 # ------------------------------------------------------------------ #
@@ -264,8 +280,8 @@ def _nd_rec(g: Graph, gids: np.ndarray, seed: int, nproc: int, cfg: NDConfig,
         for c in range(ncomp):
             sub, old = g.induced_subgraph(comp == c)
             child = ordering.add_internal(node, off, sub.n)
-            _nd_rec(sub, gids[old], seed * 7 + c, nproc, cfg, ordering,
-                    child, off)
+            _nd_rec(sub, gids[old], component_seed(seed, c), nproc, cfg,
+                    ordering, child, off)
             off += sub.n
         return
     part = compute_separator(g, seed, effective_nproc(n, nproc, cfg), cfg)
@@ -275,10 +291,11 @@ def _nd_rec(g: Graph, gids: np.ndarray, seed: int, nproc: int, cfg: NDConfig,
         return
     (g0, old0), (g1, old1), (gs, olds) = split_by_separator(g, part)
     p0, p1 = child_nprocs(nproc)
+    s0, s1 = child_seeds(seed)
     c0 = ordering.add_internal(node, start, g0.n)
-    _nd_rec(g0, gids[old0], seed * 2 + 1, p0, cfg, ordering, c0, start)
+    _nd_rec(g0, gids[old0], s0, p0, cfg, ordering, c0, start)
     c1 = ordering.add_internal(node, start + g0.n, g1.n)
-    _nd_rec(g1, gids[old1], seed * 2 + 2, p1, cfg, ordering, c1,
+    _nd_rec(g1, gids[old1], s1, p1, cfg, ordering, c1,
             start + g0.n)
     # separator ordered last (highest indices)
     sperm = separator_perm(gs, seed)

@@ -20,6 +20,20 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def ell_relax_step(nbr: jax.Array, dist_ext: jax.Array, big) -> jax.Array:
+    """One min-plus ELL relaxation: min over valid neighbors of ext+1.
+
+    ``nbr`` (n, d) compact ids with -1 padding; ``dist_ext`` is any vector
+    the ids index into — the distance vector itself in the centralized BFS
+    (``core.band``), or the halo-extended local+ghost vector in the
+    distributed sweep (``core.dgraph``).  Shared so the two sweeps relax
+    identically.
+    """
+    valid = nbr >= 0
+    dn = jnp.where(valid, dist_ext[jnp.where(valid, nbr, 0)], big)
+    return jnp.min(dn, axis=-1) + 1
+
+
 def _pad_rows(a: np.ndarray | jax.Array, block: int, fill):
     n = a.shape[0]
     pad = (-n) % block

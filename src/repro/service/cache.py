@@ -38,7 +38,9 @@ class FingerprintCache:
         return val
 
     def put(self, key: str, perm: np.ndarray) -> None:
-        perm = np.asarray(perm)
+        # Freeze a private copy: np.asarray aliases an existing ndarray, so
+        # setflags on it would freeze the *caller's* array in place.
+        perm = np.array(perm, copy=True)
         perm.setflags(write=False)
         if key in self._d:
             self._d.move_to_end(key)

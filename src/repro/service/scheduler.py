@@ -23,8 +23,9 @@ from typing import List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.graph import Graph
-from repro.core.nd import (NDConfig, child_nprocs, effective_nproc,
-                           leaf_perm, resolve_separator, separator_perm,
+from repro.core.nd import (NDConfig, child_nprocs, child_seeds,
+                           component_seed, effective_nproc, leaf_perm,
+                           resolve_separator, separator_perm,
                            separator_task, split_by_separator)
 from repro.core.ordering import Ordering
 from repro.service.batch import drive_tasks
@@ -92,8 +93,8 @@ def order_batch(graphs: Sequence[Graph],
                     sub, old = t.g.induced_subgraph(comp == c)
                     child = ordering.add_internal(t.node, off, sub.n)
                     work_list.append(_Node(t.req, sub, t.gids[old],
-                                           t.seed * 7 + c, t.nproc,
-                                           child, off))
+                                           component_seed(t.seed, c),
+                                           t.nproc, child, off))
                     off += sub.n
                 continue
             splitters.append(t)
@@ -118,11 +119,12 @@ def order_batch(graphs: Sequence[Graph],
             (g0, old0), (g1, old1), (gs, olds) = \
                 split_by_separator(t.g, part)
             p0, p1 = child_nprocs(t.nproc)
+            s0, s1 = child_seeds(t.seed)
             c0 = ordering.add_internal(t.node, t.start, g0.n)
-            nxt.append(_Node(t.req, g0, t.gids[old0], t.seed * 2 + 1, p0,
+            nxt.append(_Node(t.req, g0, t.gids[old0], s0, p0,
                              c0, t.start))
             c1 = ordering.add_internal(t.node, t.start + g0.n, g1.n)
-            nxt.append(_Node(t.req, g1, t.gids[old1], t.seed * 2 + 2, p1,
+            nxt.append(_Node(t.req, g1, t.gids[old1], s1, p1,
                              c1, t.start + g0.n))
             sperm = separator_perm(gs, t.seed)
             ordering.add_leaf(t.node, t.start + g0.n + g1.n,

@@ -22,6 +22,28 @@ def enable_compile_cache() -> None:
     _CACHE_ON = True
 
 
+_MASK64 = (1 << 64) - 1
+
+
+def mix_seeds(*vals: int) -> int:
+    """Splitmix64-style hash of a seed path → 31-bit PRNG seed.
+
+    Per-node seeds in the ND tree are derived by chaining this over
+    (seed, node path, level).  Affine formulas like ``seed * 31`` or
+    ``seed * 101 + lvl`` collapse at ``seed=0`` (every node at a level
+    reuses the identical noise stream); a full-avalanche mix does not.
+    """
+    h = 0
+    for v in vals:
+        h = (h + int(v) + 0x9E3779B97F4A7C15) & _MASK64
+        h ^= h >> 30
+        h = (h * 0xBF58476D1CE4E5B9) & _MASK64
+        h ^= h >> 27
+        h = (h * 0x94D049BB133111EB) & _MASK64
+        h ^= h >> 31
+    return h & 0x7FFFFFFF
+
+
 def pow2(x: int, lo: int = 64) -> int:
     v = lo
     while v < x:

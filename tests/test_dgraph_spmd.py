@@ -1,11 +1,14 @@
-"""shard_map halo exchange + distributed BFS, run in a subprocess with 8
-host devices (keeps the main test process at 1 device)."""
+"""shard_map halo exchange, distributed BFS and distributed matching, run
+in a subprocess with 8 host devices (keeps the main test process at 1
+device).  Host-only DGraph helpers (single-part mesh, to_host round trip)
+run in-process."""
 import json
 import os
 import subprocess
 import sys
 import textwrap
 
+import numpy as np
 import pytest
 
 SCRIPT = textwrap.dedent("""
@@ -15,50 +18,126 @@ SCRIPT = textwrap.dedent("""
     import numpy as np
     import jax
     from repro.core.dgraph import (distribute, distributed_bfs,
-                                   halo_exchange_fn, halo_reference,
-                                   make_parts_mesh)
+                                   distributed_matching, halo_exchange_fn,
+                                   halo_reference, shard_vector,
+                                   unshard_vector)
     from repro.core.band import bfs_distance
+    from repro.core.matching import validate_matching
     from repro.graphs import generators as G
     import jax.numpy as jnp
 
     g = G.grid2d(10, 10)
     dg = distribute(g, 8)
-    mesh = make_parts_mesh(8)
     rng = np.random.default_rng(1)
     x = rng.integers(0, 1000, (8, dg.n_loc_max)).astype(np.int32)
-    with mesh:
-        halo = halo_exchange_fn(dg, mesh)
-        got = np.asarray(halo(jnp.asarray(x)))
+    halo = halo_exchange_fn(dg)
+    got = np.asarray(halo(jnp.asarray(x)))
     want = halo_reference(dg, x)
     ok_halo = bool((got == want).all())
 
     # distributed BFS == centralized BFS
     src = np.zeros(g.n, bool); src[0] = True
-    src_sh = np.zeros((8, dg.n_loc_max), bool)
-    for p in range(8):
-        lo, hi = dg.vtxdist[p], dg.vtxdist[p+1]
-        src_sh[p, :hi-lo] = src[lo:hi]
-    with mesh:
-        dist = distributed_bfs(dg, mesh, src_sh, width=6)
+    dist = distributed_bfs(dg, shard_vector(dg, src), width=6)
     nbr, _ = g.to_ell()
     ref = np.asarray(bfs_distance(jnp.asarray(nbr), jnp.asarray(src), 6))
-    flat = np.concatenate([dist[p, :dg.vtxdist[p+1]-dg.vtxdist[p]]
-                           for p in range(8)])
+    flat = unshard_vector(dg, dist)
     ok_bfs = bool((np.minimum(flat, 7) == np.minimum(ref, 7)).all())
-    print(json.dumps({"halo": ok_halo, "bfs": ok_bfs}))
+
+    # distributed matching: involution, edges only, decent coverage
+    ok_match = True
+    for seed in (0, 5):
+        m = distributed_matching(dg, seed)
+        ok_match &= validate_matching(m)
+        v = np.arange(g.n)
+        for a in v[m != v]:
+            ok_match &= int(m[a]) in g.neighbors(a).tolist()
+        ok_match &= bool((m != v).mean() > 0.5)
+
+    # zero-ghost shards: two disjoint cliques split at the shard boundary
+    e = [[i, j] for i in range(8) for j in range(i + 1, 8)]
+    e += [[8 + i, 8 + j] for i in range(8) for j in range(i + 1, 8)]
+    from repro.core.graph import Graph
+    g2 = Graph.from_edges(16, np.array(e))
+    dg2 = distribute(g2, 2)
+    ok_zero = bool((dg2.n_ghost == 0).all())
+    x2 = rng.integers(0, 100, (2, dg2.n_loc_max)).astype(np.int32)
+    halo2 = halo_exchange_fn(dg2)
+    ok_zero &= bool((np.asarray(halo2(jnp.asarray(x2)))
+                     == halo_reference(dg2, x2)).all())
+    m2 = distributed_matching(dg2, 1)
+    ok_zero &= validate_matching(m2)
+
+    print(json.dumps({"halo": ok_halo, "bfs": ok_bfs,
+                      "match": ok_match, "zero_ghost": ok_zero}))
 """)
 
 
-def test_spmd_halo_and_bfs():
+def run_spmd(script):
     # Pin the backend: without JAX_PLATFORMS the child process probes for
     # accelerator plugins, which can hang far longer than the compute.
-    res = subprocess.run([sys.executable, "-c", SCRIPT],
+    res = subprocess.run([sys.executable, "-c", script],
                          capture_output=True, text=True, timeout=300,
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
                               "HOME": "/root",
                               "JAX_PLATFORMS": os.environ.get(
                                   "JAX_PLATFORMS", "cpu")})
     assert res.returncode == 0, res.stderr[-2000:]
-    out = json.loads(res.stdout.strip().splitlines()[-1])
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def test_spmd_halo_bfs_matching():
+    out = run_spmd(SCRIPT)
     assert out["halo"], "halo exchange mismatch"
     assert out["bfs"], "distributed BFS mismatch"
+    assert out["match"], "distributed matching invalid"
+    assert out["zero_ghost"], "zero-ghost shard handling broken"
+
+
+# ------------------------------------------------------------------ #
+# host-side edge cases (1 device is enough)
+# ------------------------------------------------------------------ #
+def test_halo_single_part_mesh():
+    from repro.core.dgraph import distribute, halo_exchange_fn, \
+        halo_reference
+    from repro.graphs import generators as G
+    import jax.numpy as jnp
+    g = G.grid2d(6, 6)
+    dg = distribute(g, 1)
+    assert int(dg.n_ghost.max()) == 0          # one shard owns everything
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 100, (1, dg.n_loc_max)).astype(np.int32)
+    got = np.asarray(halo_exchange_fn(dg)(jnp.asarray(x)))
+    assert (got == halo_reference(dg, x)).all()
+
+
+def test_to_host_round_trip():
+    from repro.core.dgraph import distribute, to_host
+    from repro.graphs import generators as G
+    g = G.rgg2d(120, seed=4)
+    g.adjwgt = g.adjwgt.copy()
+    for nparts in (1, 3):
+        dg = distribute(g, nparts)
+        g2 = to_host(dg)
+        assert np.array_equal(g2.xadj, g.xadj)
+        assert np.array_equal(g2.adjncy, g.adjncy)
+        assert np.array_equal(g2.adjwgt, g.adjwgt)
+        assert np.array_equal(g2.vwgt, g.vwgt)
+
+
+def test_coarse_vtxdist_shard_aligned():
+    from repro.core.coarsen import coarse_vtxdist, coarsen_once, match_graph
+    from repro.graphs import generators as G
+    g = G.grid2d(8, 8)
+    vtxdist = np.array([0, 16, 32, 48, 64])
+    m = match_graph(g, 2)
+    cg, cmap = coarsen_once(g, m)
+    cvtx = coarse_vtxdist(vtxdist, m)
+    assert cvtx[0] == 0 and cvtx[-1] == cg.n
+    assert (np.diff(cvtx) >= 0).all()
+    # every coarse vertex lands in the range of its representative's owner
+    rep = np.minimum(np.arange(g.n), m)
+    owner_f = np.searchsorted(vtxdist, rep, side="right") - 1
+    for v in range(g.n):
+        c = cmap[v]
+        o = np.searchsorted(cvtx, c, side="right") - 1
+        assert o == owner_f[v]

@@ -52,6 +52,36 @@ def test_matching_rate():
     assert frac > 0.7  # paper: converges in ~5 rounds to near-complete
 
 
+@pytest.mark.parametrize("n", [63, 127])
+def test_matching_bucket_boundary(n):
+    """Regression: with n just below the padded-ELL bucket boundary, an
+    out-of-range (padded-lane) id must fall back to self-match — the old
+    ``minimum(m, n-1)`` clamp silently merged it onto real vertex n-1."""
+    g = G.circuit(n, seed=1)
+    for seed in range(4):
+        m = match_graph(g, seed)
+        assert m.min() >= 0 and m.max() < g.n
+        assert validate_matching(m)
+        for v in np.nonzero(m != np.arange(g.n))[0]:
+            assert m[v] in g.neighbors(v), \
+                f"n={n} seed={seed}: {v}->{m[v]} is not an edge"
+
+
+def test_mix_seeds_no_collapse():
+    """Regression: seed*31 / seed*101+lvl collapse at seed=0 — every node
+    at a level reused the identical FM noise stream."""
+    from repro.util import mix_seeds
+    # distinct across path positions at seed 0, and never the identity
+    derived = {mix_seeds(0, k) for k in range(64)}
+    assert len(derived) == 64 and 0 not in derived
+    # sibling subtrees of a seed-0 root get distinct streams at each level
+    from repro.core.nd import child_seeds
+    s0, s1 = child_seeds(0)
+    assert s0 != s1
+    assert {mix_seeds(s0, lvl) for lvl in range(8)}.isdisjoint(
+        {mix_seeds(s1, lvl) for lvl in range(8)})
+
+
 # ------------------------------------------------------------------ #
 # coarsening
 # ------------------------------------------------------------------ #

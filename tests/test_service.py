@@ -118,6 +118,19 @@ def test_fingerprint_sensitivity():
     assert graph_fingerprint(g3) != graph_fingerprint(g)   # weights
 
 
+def test_cache_put_does_not_freeze_caller():
+    """Regression: put() used to setflags(write=False) on an aliasing view
+    of the caller's array, freezing the submitter's permutation in place."""
+    c = FingerprintCache(capacity=4)
+    mine = np.arange(6)
+    c.put("k", mine)
+    assert mine.flags.writeable, "caller's array was frozen by the cache"
+    mine[0] = 99                                  # must not raise
+    got = c.get("k")
+    assert got[0] == 0, "cache entry aliases the caller's array"
+    assert not got.flags.writeable                # cached copy stays frozen
+
+
 def test_cache_lru_and_counters():
     c = FingerprintCache(capacity=2)
     c.put("a", np.arange(3))
