@@ -11,7 +11,11 @@ jax initializes).  Emits ``BENCH_dnd.json``:
     asserted ≤ 1.05 (the tracked quality-parity bound);
   * wall-clock of the distributed driver on 1 / 2 / 4 / 8 virtual devices
     (CPU shard_map collectives: this tracks dispatch overhead trends, not
-    real-accelerator speedup).
+    real-accelerator speedup);
+  * ``max_gather``: the largest centralizing gather (``to_host`` /
+    ``unshard_vector`` element count) observed during the p=8 runs —
+    the gather-free pipeline keeps it bounded by the configured
+    thresholds, independent of graph size.
 """
 from __future__ import annotations
 
@@ -54,7 +58,7 @@ def main() -> None:
         return
     import numpy as np
     from benchmarks.common import row
-    from repro.core.dgraph import distribute
+    from repro.core.dgraph import distribute, track_gathers
     from repro.core.dnd import distributed_nested_dissection
     from repro.core.nd import nested_dissection
     from repro.sparse.symbolic import nnz_opc
@@ -65,6 +69,7 @@ def main() -> None:
     per_graph = {}
     wall = {p: 0.0 for p in DEVICE_COUNTS}
     ratios = []
+    max_gather = 0
     for name, g in graphs.items():
         perm_h = nested_dissection(g, seed=0, nproc=8)
         opc_h = nnz_opc(g, perm_h)[1]
@@ -72,7 +77,8 @@ def main() -> None:
         for p in DEVICE_COUNTS:
             dg = distribute(g, p)
             t0 = time.perf_counter()
-            perm_d = distributed_nested_dissection(dg, seed=0)
+            with track_gathers() as gathers:
+                perm_d = distributed_nested_dissection(dg, seed=0)
             dt = time.perf_counter() - t0
             wall[p] += dt
             entry[f"t_p{p}_s"] = round(dt, 3)
@@ -81,9 +87,12 @@ def main() -> None:
                 entry["opc_dnd"] = opc_d
                 entry["opc_ratio"] = round(opc_d / opc_h, 4)
                 ratios.append(opc_d / opc_h)
+                entry["max_gather"] = max(s for _, s in gathers)
+                max_gather = max(max_gather, entry["max_gather"])
         per_graph[name] = entry
         row(f"dnd/{name}", entry[f"t_p8_s"] * 1e6,
             n=g.n, opc_ratio=entry["opc_ratio"],
+            max_gather=entry["max_gather"],
             **{f"t_p{p}": entry[f"t_p{p}_s"] for p in DEVICE_COUNTS})
 
     ratio_mean = float(np.mean(ratios))
@@ -91,6 +100,7 @@ def main() -> None:
         "graphs": per_graph,
         "wallclock_s": {str(p): round(wall[p], 3) for p in DEVICE_COUNTS},
         "opc_ratio_mean": round(ratio_mean, 4),
+        "max_gather": max_gather,
     }
     with open("BENCH_dnd.json", "w") as f:
         json.dump(out, f, indent=2)

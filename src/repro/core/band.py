@@ -113,6 +113,50 @@ def execute_bfs_works(works: Sequence[BFSWork],
     return results                                           # type: ignore
 
 
+def band_graph_with_anchors(sub: Graph, band_part: np.ndarray,
+                            band_dist: np.ndarray, width: int,
+                            w_out0: int, w_out1: int
+                            ) -> Tuple[Graph, np.ndarray, np.ndarray]:
+    """Attach the two side anchors to an extracted band subgraph.
+
+    ``sub`` is the induced band graph (n_band vertices), ``band_part`` /
+    ``band_dist`` its per-vertex part and separator distance, and
+    ``w_out0`` / ``w_out1`` the total vertex weight that fell *outside*
+    the band on each side.  Appends one anchor per side carrying that
+    weight, wired to the last band layer of its side (dist == width), so
+    FM cannot move a last-layer vertex across without pulling the whole
+    out-of-band weight into the separator (paper §3.3 balance guard).
+
+    Shared by the centralized ``extract_band`` and the distributed
+    pipeline's band centralization (``core.dnd``), so both construct
+    bit-identical band FM problems.  Returns (band, part_full, locked)
+    with the two anchors appended (parts 0/1, locked).
+    """
+    nb = sub.n
+    last = band_dist == width
+    last0 = np.nonzero(last & (band_part == 0))[0]
+    last1 = np.nonzero(last & (band_part == 1))[0]
+    a0, a1 = nb, nb + 1
+    extra = []
+    if len(last0):
+        extra.append(np.stack([np.full(len(last0), a0), last0], 1))
+    if len(last1):
+        extra.append(np.stack([np.full(len(last1), a1), last1], 1))
+    src = np.repeat(np.arange(nb), sub.degrees())
+    edges = np.stack([src, sub.adjncy.astype(np.int64)], 1)
+    if extra:
+        edges = np.concatenate([edges[edges[:, 0] < edges[:, 1]]] + extra)
+    else:
+        edges = edges[edges[:, 0] < edges[:, 1]]
+    vwgt = np.concatenate([sub.vwgt, [max(w_out0, 0), max(w_out1, 0)]])
+    ewgt = np.ones(len(edges), dtype=np.int64)
+    band = Graph.from_edges(nb + 2, edges, vwgt=vwgt, ewgt=ewgt)
+    band_part_full = np.concatenate([band_part, np.int8([0, 1])])
+    locked = np.zeros(nb + 2, bool)
+    locked[a0:] = True
+    return band, band_part_full, locked
+
+
 def extract_band(g: Graph, part: np.ndarray, width: int = 3,
                  dist: Optional[np.ndarray] = None
                  ) -> Tuple[Graph, np.ndarray, np.ndarray, np.ndarray]:
@@ -135,35 +179,14 @@ def extract_band(g: Graph, part: np.ndarray, width: int = 3,
     dist = np.asarray(dist)[:g.n]
     in_band = dist <= width
     sub, old_ids = g.induced_subgraph(in_band)
-    nb = sub.n
     band_part = part[old_ids].astype(np.int8)
 
     # anchors: out-of-band weight per side, wired to the last layer
     out_mask = ~in_band
     w_out0 = int(g.vwgt[out_mask & (part == 0)].sum())
     w_out1 = int(g.vwgt[out_mask & (part == 1)].sum())
-    last = dist[old_ids] == width
-    last0 = np.nonzero(last & (band_part == 0))[0]
-    last1 = np.nonzero(last & (band_part == 1))[0]
-    a0, a1 = nb, nb + 1
-    extra = []
-    if len(last0):
-        extra.append(np.stack([np.full(len(last0), a0), last0], 1))
-    if len(last1):
-        extra.append(np.stack([np.full(len(last1), a1), last1], 1))
-    src = np.repeat(np.arange(nb), sub.degrees())
-    edges = np.stack([src, sub.adjncy.astype(np.int64)], 1)
-    if extra:
-        edges = np.concatenate([edges[edges[:, 0] < edges[:, 1]]] + extra)
-    else:
-        edges = edges[edges[:, 0] < edges[:, 1]]
-    vwgt = np.concatenate([sub.vwgt, [max(w_out0, 0), max(w_out1, 0)]])
-    ewgt = np.ones(len(edges), dtype=np.int64)
-    band = Graph.from_edges(nb + 2, edges, vwgt=vwgt, ewgt=ewgt)
-
-    band_part_full = np.concatenate([band_part, np.int8([0, 1])])
-    locked = np.zeros(nb + 2, bool)
-    locked[a0:] = True
+    band, band_part_full, locked = band_graph_with_anchors(
+        sub, band_part, dist[old_ids], width, w_out0, w_out1)
     old_full = np.concatenate([old_ids, [-1, -1]])
     return band, band_part_full, locked, old_full
 

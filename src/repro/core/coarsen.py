@@ -13,11 +13,21 @@ halves, each holding a *duplicate*, so from that point on independent
 multilevel instances run and the best projected separator wins.  We model
 the instance tree faithfully: ``n_instances`` doubles at every fold level
 until each (simulated) process holds one copy.
+
+Like BFS and FM, the matching stage is *work-yielding*:
+``coarsen_multilevel_task`` yields one ``MatchWork`` per level and the
+driver sends back the matching.  The sequential wrapper
+(``coarsen_multilevel``) executes each work immediately; the ordering
+service batches the matching works of every subproblem at a depth into
+one ``kernels.ops.match_batch`` dispatch per ELL bucket (DESIGN.md §3),
+so the deferred-subtree endgame no longer pays one device dispatch per
+subproblem per level.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from collections import defaultdict
+from typing import Generator, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -44,6 +54,63 @@ def match_graph(g: Graph, seed: int, rounds: int = 8) -> np.ndarray:
     # n-1 would silently merge the vertex onto real vertex n-1.
     bad = (m < 0) | (m >= g.n)
     return np.where(bad, np.arange(g.n, dtype=m.dtype), m)
+
+
+@dataclasses.dataclass
+class MatchWork:
+    """One heavy-edge-matching request (unpadded host ELL arrays).
+
+    Yielded by ``coarsen_multilevel_task``; ``execute_match_works`` pads
+    each work to its power-of-two ELL bucket and runs every work sharing a
+    bucket as ONE ``kernels.ops.match_batch`` dispatch (one lane per
+    graph).  Per-lane results are independent of batch composition.
+    """
+    nbr: np.ndarray                     # (n, d) int32 ELL ids, -1 pad
+    wgt: np.ndarray                     # (n, d) int32 edge weights, 0 pad
+    seed: int
+    rounds: int = 8
+
+    def bucket_key(self) -> Tuple[int, int, int]:
+        n, d = self.nbr.shape
+        return (pow2(n), pow2(max(d, 1), 8), self.rounds)
+
+
+def match_work_for(g: Graph, seed: int, rounds: int = 8) -> MatchWork:
+    """Build the MatchWork for one graph (same ELL form as match_graph)."""
+    dmax = int(g.degrees().max()) if g.n else 1
+    nbr, wgt = g.to_ell(dmax)
+    return MatchWork(nbr=nbr, wgt=wgt, seed=seed, rounds=rounds)
+
+
+def execute_match_works(works: Sequence[MatchWork]) -> List[np.ndarray]:
+    """Run matching works, one batched dispatch per (n_pad, d_pad, rounds).
+
+    Returns, per work in input order, the flat (n,) matching with
+    match[v] = v for singletons (out-of-range ids from padded lanes are
+    masked back to self, as in ``match_graph``).
+    """
+    from repro.kernels.ops import match_batch
+    results: List[Optional[np.ndarray]] = [None] * len(works)
+    groups = defaultdict(list)
+    for i, w in enumerate(works):
+        groups[w.bucket_key()].append(i)
+    for (n_pad, d_pad, rounds), idxs in groups.items():
+        L = len(idxs)
+        nbr_b = -np.ones((L, n_pad, d_pad), np.int32)
+        wgt_b = np.zeros((L, n_pad, d_pad), np.int32)
+        keys = np.stack([np.asarray(jax.random.PRNGKey(works[i].seed))
+                         for i in idxs])
+        for j, i in enumerate(idxs):
+            n, d = works[i].nbr.shape
+            nbr_b[j, :n, :d] = works[i].nbr
+            wgt_b[j, :n, :d] = works[i].wgt
+        m = np.asarray(match_batch(nbr_b, wgt_b, keys, rounds=rounds))
+        for j, i in enumerate(idxs):
+            n = works[i].nbr.shape[0]
+            mi = m[j, :n].astype(np.int64)
+            bad = (mi < 0) | (mi >= n)
+            results[i] = np.where(bad, np.arange(n, dtype=np.int64), mi)
+    return results                                           # type: ignore
 
 
 def coarsen_once(g: Graph, match: np.ndarray):
@@ -97,14 +164,19 @@ class MultilevelState:
         return self.levels[-1].graph
 
 
-def coarsen_multilevel(g: Graph, seed: int, nproc: int = 1,
-                       coarse_target: int = 120, fold_threshold: int = 100,
-                       max_instances: int = 16,
-                       min_reduction: float = 0.97) -> MultilevelState:
+def coarsen_multilevel_task(g: Graph, seed: int, nproc: int = 1,
+                            coarse_target: int = 120,
+                            fold_threshold: int = 100,
+                            max_instances: int = 16,
+                            min_reduction: float = 0.97
+                            ) -> Generator[MatchWork, np.ndarray,
+                                           MultilevelState]:
     """Coarsen until ``coarse_target`` vertices, tracking fold-dup instances.
 
-    ``nproc`` is the simulated process count p of the paper; folding starts
-    when n / p_cur < fold_threshold, and every fold doubles the number of
+    Work-yielding form: yields one ``MatchWork`` per level, receives the
+    flat matching back, and returns the ``MultilevelState``.  ``nproc`` is
+    the simulated process count p of the paper; folding starts when
+    n / p_cur < fold_threshold, and every fold doubles the number of
     independent instances (capped at ``max_instances`` for memory, the
     paper's own trade-off: "resort to folding only when the number of
     vertices ... reaches some minimum threshold").
@@ -118,10 +190,27 @@ def coarsen_multilevel(g: Graph, seed: int, nproc: int = 1,
         if p_cur > 1 and cur.n / p_cur < fold_threshold:
             p_cur = (p_cur + 1) // 2                       # fold ...
             n_inst = min(n_inst * 2, max_instances)        # ... with dup
-        m = match_graph(cur, lvl_seed)
+        m = yield match_work_for(cur, lvl_seed)
         lvl_seed += 1
         cg, cmap = coarsen_once(cur, m)
         if cg.n > cur.n * min_reduction:                   # stalled
             break
         levels.append(Level(cg, cmap, n_inst))
     return MultilevelState(levels)
+
+
+def coarsen_multilevel(g: Graph, seed: int, nproc: int = 1,
+                       coarse_target: int = 120, fold_threshold: int = 100,
+                       max_instances: int = 16,
+                       min_reduction: float = 0.97) -> MultilevelState:
+    """Synchronous driver of ``coarsen_multilevel_task`` (one dispatch per
+    level; the ordering service drives the generator batched instead)."""
+    gen = coarsen_multilevel_task(g, seed, nproc, coarse_target,
+                                  fold_threshold, max_instances,
+                                  min_reduction)
+    try:
+        work = next(gen)
+        while True:
+            work = gen.send(execute_match_works([work])[0])
+    except StopIteration as stop:
+        return stop.value

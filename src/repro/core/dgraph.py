@@ -27,12 +27,31 @@ uses, ``repro.util.pow2``).
 
 Scalability note (matching the paper): no shard stores ghost *adjacency* —
 only ghost values — so per-shard memory is O(local arcs).
+
+Two kinds of routines live here (DESIGN.md §4):
+
+  * **device collectives** (``halo_exchange_fn``, ``distributed_bfs``,
+    ``distributed_matching``) — ``shard_map`` programs over the parts axis;
+  * **structure rebuilds** (``distribute``, ``dgraph_induced``,
+    ``dgraph_fold``, ``dgraph_coarsen``) — host-side reshuffles of the
+    stacked arrays that model the owner-routed ``MPI_Alltoallv`` of the
+    paper's redistribution steps.  They stage the routed arcs in flat
+    arrays (the analog of the exchange's send/receive buffers, O(arcs)
+    words), never a centralized CSR graph.
+
+The *gather* API — ``to_host`` and ``unshard_vector``, the only two
+routines that intentionally materialize one centralized object from a
+distributed one — is instrumented: inside a ``track_gathers()`` block every
+call records its element count, which is how the gather-free tests assert
+that ``distributed_nested_dissection`` never centralizes more than its
+configured thresholds (ISSUE: no O(n) per-host cliff).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
-from typing import Optional
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -69,37 +88,51 @@ class DGraph:
         return int(self.vtxdist[-1])
 
 
-def distribute(g: Graph, nparts: int,
-               vtxdist: Optional[np.ndarray] = None,
-               bucket: bool = True) -> DGraph:
-    """Distribute a host graph (the paper's user-defined ranges).
+def _build_dgraph(vtxdist: np.ndarray, src: np.ndarray, dst: np.ndarray,
+                  w: np.ndarray, vwgt: np.ndarray,
+                  bucket: bool = True) -> DGraph:
+    """Assemble the stacked shard arrays from an owner-routed arc list.
 
-    ``vtxdist`` optionally supplies custom ownership ranges (the coarse
-    graphs of distributed coarsening keep coarse vertices on the owner of
-    their representative); the default is a block distribution.  With
-    ``bucket`` the padded shard shapes are rounded up to powers of two so
-    jitted collectives are reused across same-bucket subgraphs.
+    The shared back end of every structure rebuild (``distribute``,
+    ``dgraph_induced``, ``dgraph_fold``, ``dgraph_coarsen``).  ``src`` /
+    ``dst`` / ``w`` are flat *directed* arc arrays in global ids (each
+    undirected edge appears in both directions) — the staging buffers of
+    the owner-routed Alltoallv that the paper's redistribution performs;
+    ``vwgt`` is the flat (n,) vertex-weight vector in global-id order.
+    Parallel arcs are deduplicated with accumulated weights (exactly
+    ``Graph.from_edges``'s canonicalization), so rebuilding through here
+    matches the centralized builders arc-for-arc.
     """
-    n = g.n
-    if vtxdist is None:
-        vtxdist = np.linspace(0, n, nparts + 1).astype(np.int64)
-    else:
-        vtxdist = np.asarray(vtxdist, dtype=np.int64)
-        assert len(vtxdist) == nparts + 1 and vtxdist[-1] == n
+    vtxdist = np.asarray(vtxdist, dtype=np.int64)
+    nparts = len(vtxdist) - 1
+    n = int(vtxdist[-1])
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    w = np.asarray(w, dtype=np.int64)
+    if len(src):
+        order = np.lexsort((dst, src))
+        src, dst, w = src[order], dst[order], w[order]
+        uniq = np.concatenate(
+            [[True], (src[1:] != src[:-1]) | (dst[1:] != dst[:-1])])
+        seg = np.cumsum(uniq) - 1
+        wacc = np.zeros(seg[-1] + 1, dtype=np.int64)
+        np.add.at(wacc, seg, w)
+        src, dst, w = src[uniq], dst[uniq], wacc
+
     n_loc = np.diff(vtxdist)
     n_loc_max = int(n_loc.max()) if nparts else 1
-    deg = g.degrees()
-    dmax = int(deg.max()) if n and len(g.adjncy) else 1
+    deg = np.bincount(src, minlength=max(n, 1))[:max(n, 1)]
+    dmax = int(deg.max()) if len(src) else 1
     if bucket:
         n_loc_max = pow2(max(n_loc_max, 1), 8)
         dmax = pow2(max(dmax, 1), 4)
     n_loc_max = max(n_loc_max, 1)
+    dmax = max(dmax, 1)
 
     owner = np.searchsorted(vtxdist, np.arange(n), side="right") - 1
-    src = np.repeat(np.arange(n, dtype=np.int64), deg)
-    dst = g.adjncy.astype(np.int64)
     p_src = owner[src]
-    col = np.arange(len(dst)) - g.xadj[src]
+    xadj = np.concatenate([[0], np.cumsum(deg)])
+    col = np.arange(len(dst)) - xadj[src]
     li_src = src - vtxdist[p_src]
     remote = p_src != owner[dst]
 
@@ -122,16 +155,45 @@ def distribute(g: Graph, nparts: int,
 
     nbr_gst = -np.ones((nparts, n_loc_max, dmax), dtype=np.int32)
     ewgt_gst = np.zeros((nparts, n_loc_max, dmax), dtype=np.int32)
-    cidx = dst - vtxdist[owner[dst]]
+    cidx = dst - vtxdist[owner[dst]] if len(dst) else dst
     if len(uk):
         cidx[remote] = n_loc_max + gslot[np.searchsorted(uk, keys)]
     nbr_gst[p_src, li_src, col] = cidx
-    ewgt_gst[p_src, li_src, col] = g.adjwgt
+    ewgt_gst[p_src, li_src, col] = w
 
-    vwgt = np.zeros((nparts, n_loc_max), dtype=np.int64)
-    vwgt[owner, np.arange(n) - vtxdist[owner]] = g.vwgt
+    vwgt_sh = np.zeros((nparts, n_loc_max), dtype=np.int64)
+    vwgt_sh[owner, np.arange(n) - vtxdist[owner]] = np.asarray(vwgt, np.int64)
     return DGraph(vtxdist, nbr_gst, ewgt_gst, ghost_gid, n_loc, n_ghost,
-                  vwgt)
+                  vwgt_sh)
+
+
+def distribute(g: Graph, nparts: int,
+               vtxdist: Optional[np.ndarray] = None,
+               bucket: bool = True) -> DGraph:
+    """Distribute a host graph (the paper's user-defined ranges).
+
+    Args:
+      g: centralized host graph (symmetric CSR).
+      nparts: number of shards P.
+      vtxdist: optional (P+1,) custom ownership ranges (the coarse graphs
+        of distributed coarsening keep coarse vertices on the owner of
+        their representative); the default is a balanced block
+        distribution.
+      bucket: round padded shard shapes up to powers of two so jitted
+        collectives are reused across same-bucket subgraphs.
+
+    Returns a ``DGraph`` whose stacked arrays hold g partitioned by
+    ``vtxdist`` ranges.
+    """
+    n = g.n
+    if vtxdist is None:
+        vtxdist = np.linspace(0, n, nparts + 1).astype(np.int64)
+    else:
+        vtxdist = np.asarray(vtxdist, dtype=np.int64)
+        assert len(vtxdist) == nparts + 1 and vtxdist[-1] == n
+    src = np.repeat(np.arange(n, dtype=np.int64), g.degrees())
+    return _build_dgraph(vtxdist, src, g.adjncy, g.adjwgt, g.vwgt,
+                         bucket=bucket)
 
 
 @functools.lru_cache(maxsize=None)
@@ -144,10 +206,44 @@ def make_parts_mesh(nparts: int) -> Mesh:
 
 
 # ------------------------------------------------------------------ #
+# gather instrumentation (the gather-free tests hang off this)
+# ------------------------------------------------------------------ #
+_GATHER_LOG: Optional[List[Tuple[str, int]]] = None
+
+
+@contextlib.contextmanager
+def track_gathers():
+    """Record every centralizing gather executed inside the block.
+
+    Yields a list that receives one ``(kind, n_elements)`` tuple per
+    ``to_host`` / ``unshard_vector`` call.  The gather-free ND tests run
+    ``distributed_nested_dissection`` under this and assert that no
+    recorded gather exceeds the configured centralization thresholds —
+    i.e. that no full-graph adjacency or full permutation is ever
+    materialized on a single host above those thresholds.
+    """
+    global _GATHER_LOG
+    prev, _GATHER_LOG = _GATHER_LOG, []
+    try:
+        yield _GATHER_LOG
+    finally:
+        _GATHER_LOG = prev
+
+
+def _note_gather(kind: str, size: int) -> None:
+    if _GATHER_LOG is not None:
+        _GATHER_LOG.append((kind, int(size)))
+
+
+# ------------------------------------------------------------------ #
 # sharded <-> flat host vectors
 # ------------------------------------------------------------------ #
 def shard_vector(dg: DGraph, x: np.ndarray, fill=0) -> np.ndarray:
-    """Flat global (n,) -> sharded (P, n_loc_max) (padding = fill)."""
+    """Flat global (n,) -> sharded (P, n_loc_max) (padding = fill).
+
+    A scatter (host value distributed *out* to shards), so it is not part
+    of the instrumented gather API.
+    """
     out = np.full((dg.nparts, dg.n_loc_max), fill, dtype=np.asarray(x).dtype)
     for p in range(dg.nparts):
         lo, hi = dg.vtxdist[p], dg.vtxdist[p + 1]
@@ -155,32 +251,243 @@ def shard_vector(dg: DGraph, x: np.ndarray, fill=0) -> np.ndarray:
     return out
 
 
+def _raster_flat(dg: DGraph, xs: np.ndarray) -> np.ndarray:
+    """Sharded (P, n_loc_max) -> flat (n,) without touching the gather log.
+
+    Internal staging primitive for the structure rebuilds; user-facing
+    centralization must go through ``unshard_vector`` so it is counted.
+    """
+    xs = np.asarray(xs)
+    li = np.arange(dg.n_loc_max)
+    keep = (li[None, :] < dg.n_loc[:, None]).reshape(-1)
+    return xs.reshape(dg.nparts * dg.n_loc_max, *xs.shape[2:])[keep]
+
+
 def unshard_vector(dg: DGraph, xs: np.ndarray) -> np.ndarray:
-    """Sharded (P, n_loc_max) -> flat global (n,)."""
-    return np.concatenate([xs[p, :dg.vtxdist[p + 1] - dg.vtxdist[p]]
-                           for p in range(dg.nparts)])
+    """Gather a sharded (P, n_loc_max) vector into a flat global (n,).
+
+    One of the two instrumented centralizing gathers (with ``to_host``);
+    the gather-free pipeline only applies it to sub-threshold objects.
+    """
+    _note_gather("unshard_vector", dg.n_global)
+    return _raster_flat(dg, xs)
+
+
+def shard_gids(dg: DGraph) -> np.ndarray:
+    """(P, n_loc_max) global vertex id per local slot (-1 on padding)."""
+    li = np.arange(dg.n_loc_max, dtype=np.int64)
+    gid = dg.vtxdist[:-1, None] + li[None, :]
+    return np.where(li[None, :] < dg.n_loc[:, None], gid, -1)
+
+
+def valid_mask(dg: DGraph) -> np.ndarray:
+    """(P, n_loc_max) bool: True on real local slots, False on padding."""
+    li = np.arange(dg.n_loc_max)
+    return li[None, :] < dg.n_loc[:, None]
+
+
+def pull_by_gid(dg: DGraph, values_sh: np.ndarray, gid: np.ndarray,
+                fill=0) -> np.ndarray:
+    """Owner-routed value pull: out[...] = values of vertices ``gid``.
+
+    ``values_sh`` is a (P, n_loc_max) sharded vector on ``dg``'s layout;
+    ``gid`` is any-shape global ids (< 0 yields ``fill``).  This is the
+    host-side model of the paper's point-to-point value fetch (the same
+    owner lookup the halo exchange performs on device); data volume is
+    O(len(gid)) words, independent of graph size.
+    """
+    gid = np.asarray(gid, dtype=np.int64)
+    ok = (gid >= 0) & (gid < dg.n_global)
+    gsafe = np.clip(gid, 0, max(dg.n_global - 1, 0))
+    owner = np.searchsorted(dg.vtxdist, gsafe, side="right") - 1
+    owner = np.clip(owner, 0, dg.nparts - 1)
+    li = np.clip(gsafe - dg.vtxdist[owner], 0, dg.n_loc_max - 1)
+    out = np.asarray(values_sh)[owner, li]
+    return np.where(ok, out, fill)
+
+
+def scatter_by_gid(dg: DGraph, target_sh: np.ndarray, gid: np.ndarray,
+                   vals: np.ndarray) -> np.ndarray:
+    """Owner-routed value push: write ``vals`` at vertices ``gid``.
+
+    The inverse of ``pull_by_gid``: returns a copy of ``target_sh``
+    (a (P, n_loc_max) sharded vector on ``dg``'s layout) with
+    ``vals[k]`` written to the owner slot of ``gid[k]`` (negative ids
+    skipped).  Models the project-back message of band refinement; data
+    volume is O(len(gid)) words.
+    """
+    gid = np.asarray(gid, dtype=np.int64).reshape(-1)
+    vals = np.asarray(vals).reshape(-1)
+    ok = (gid >= 0) & (gid < dg.n_global)
+    gid, vals = gid[ok], vals[ok]
+    owner = np.searchsorted(dg.vtxdist, gid, side="right") - 1
+    out = np.asarray(target_sh).copy()
+    out[owner, gid - dg.vtxdist[owner]] = vals
+    return out
+
+
+def reshard_vector(src_dg: DGraph, dst_dg: DGraph, xs: np.ndarray,
+                   fill=0) -> np.ndarray:
+    """Move a sharded vector between two layouts of the *same* vertex set.
+
+    Used when fold-dup rejoins: the winning duplicate's part vector lives
+    on the folded layout and is pulled back onto the full group's layout.
+    """
+    assert src_dg.n_global == dst_dg.n_global
+    return pull_by_gid(src_dg, xs, shard_gids(dst_dg), fill=fill)
+
+
+# ------------------------------------------------------------------ #
+# structure rebuilds (host-modelled Alltoallv; DESIGN.md §4)
+# ------------------------------------------------------------------ #
+def dgraph_arcs(dg: DGraph) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Flat directed arc triples (src_gid, dst_gid, w) of the structure.
+
+    The staging form every rebuild routes through; both directions of
+    each undirected edge are present (ELL rows are symmetric).
+    """
+    nlm = dg.n_loc_max
+    p, li, slot = np.nonzero(dg.nbr_gst >= 0)
+    c = dg.nbr_gst[p, li, slot].astype(np.int64)
+    src = dg.vtxdist[p] + li
+    loc = c < nlm
+    dst = np.where(loc, dg.vtxdist[p] + c,
+                   dg.ghost_gid[p, np.maximum(c - nlm, 0)])
+    w = dg.ewgt_gst[p, li, slot].astype(np.int64)
+    return src, dst, w
 
 
 def to_host(dg: DGraph) -> Graph:
     """Gather the distributed structure back into one centralized Graph.
 
     The §3.1 centralization step: below the sequential threshold the
-    subgraph is gathered onto one process and ordered there.
+    subgraph is gathered onto one process and ordered there.  Instrumented
+    (see ``track_gathers``): the gather-free pipeline only calls this on
+    sub-threshold subgraphs, coarsest graphs, and band graphs.
     """
-    Pn, nlm, d = dg.nbr_gst.shape
-    p, li, slot = np.nonzero(dg.nbr_gst >= 0)
-    c = dg.nbr_gst[p, li, slot]
-    src = dg.vtxdist[p] + li
-    loc = c < nlm
-    dst = np.empty(len(c), dtype=np.int64)
-    dst[loc] = dg.vtxdist[p[loc]] + c[loc]
-    dst[~loc] = dg.ghost_gid[p[~loc], c[~loc] - nlm]
-    w = dg.ewgt_gst[p, li, slot]
+    _note_gather("to_host", dg.n_global)
+    src, dst, w = dgraph_arcs(dg)
     keep = src < dst                      # one direction; from_edges mirrors
-    vwgt = unshard_vector(dg, dg.vwgt)
+    vwgt = _raster_flat(dg, dg.vwgt)
     return Graph.from_edges(dg.n_global,
                             np.stack([src[keep], dst[keep]], 1),
-                            vwgt=vwgt, ewgt=w[keep].astype(np.int64))
+                            vwgt=vwgt, ewgt=w[keep])
+
+
+def dgraph_induced(dg: DGraph, keep_sh: np.ndarray,
+                   nparts: Optional[int] = None,
+                   payloads: Sequence[np.ndarray] = (),
+                   fills: Sequence = (),
+                   bucket: bool = True
+                   ) -> Tuple[DGraph, List[np.ndarray]]:
+    """Distributed induced subgraph (paper §3.1, gather-free form).
+
+    Args:
+      keep_sh: (P, n_loc_max) bool mask of kept vertices (padding slots
+        ignored).
+      nparts: target shard count.  ``None`` keeps every kept vertex on its
+        current owner (in-place extraction — the band path); an integer
+        redistributes onto balanced blocks over that many shards (the
+        paper folds each separated part onto its child process group).
+      payloads: per-vertex (P, n_loc_max) arrays (e.g. original-id
+        vectors) to carry onto the new layout.
+      fills: padding fill value per payload (default 0).
+
+    Kept vertices are renumbered by ascending global id, so the induced
+    numbering is independent of the shard layout; new ownership ranges
+    come from a prefix sum over per-shard keep counts (the offset
+    exchange of the paper's redistribution).  Returns the sub-DGraph and
+    the payloads mapped onto its layout.
+    """
+    keep = np.asarray(keep_sh, dtype=bool) & valid_mask(dg)
+    counts = keep.sum(axis=1).astype(np.int64)
+    n_new = int(counts.sum())
+    if nparts is None:
+        new_vtxdist = np.concatenate([[0], np.cumsum(counts)])
+    else:
+        new_vtxdist = np.linspace(0, n_new, nparts + 1).astype(np.int64)
+
+    # rank kept vertices in shard-major raster order == ascending gid
+    flatk = keep.reshape(-1)
+    newid_flat = -np.ones(dg.n_global, dtype=np.int64)
+    old_gid = shard_gids(dg).reshape(-1)[flatk]          # ascending
+    newid_flat[old_gid] = np.arange(n_new)
+
+    src, dst, w = dgraph_arcs(dg)
+    ns, nd = newid_flat[src], newid_flat[dst]
+    ka = (ns >= 0) & (nd >= 0)
+    vwgt_new = dg.vwgt.reshape(-1)[flatk]
+    sub = _build_dgraph(new_vtxdist, ns[ka], nd[ka], w[ka], vwgt_new,
+                        bucket=bucket)
+    mapped = []
+    for i, pay in enumerate(payloads):
+        fill = fills[i] if i < len(fills) else 0
+        flat = np.asarray(pay).reshape(-1)[flatk]        # by new gid
+        mapped.append(shard_vector(sub, flat, fill=fill))
+    return sub, mapped
+
+
+def dgraph_fold(dg: DGraph, bucket: bool = True) -> DGraph:
+    """Fold the structure onto ⌈P/2⌉ shards (paper §3.2).
+
+    Adjacent shard pairs merge (ownership ranges stay contiguous); global
+    vertex ids are unchanged, so sharded vectors move between the two
+    layouts with ``reshard_vector``.  Each fold-dup half runs an
+    independent multilevel instance on (a duplicate of) the folded
+    structure.
+    """
+    new_vtxdist = np.concatenate([dg.vtxdist[:-1:2], dg.vtxdist[-1:]])
+    src, dst, w = dgraph_arcs(dg)
+    vwgt = _raster_flat(dg, dg.vwgt)
+    return _build_dgraph(new_vtxdist, src, dst, w, vwgt, bucket=bucket)
+
+
+def dgraph_coarsen(dg: DGraph, match_sh: np.ndarray,
+                   bucket: bool = True) -> Tuple[DGraph, np.ndarray]:
+    """Distributed coarse-graph build from a sharded matching (§3.2).
+
+    ``match_sh`` is (P, n_loc_max) mate global ids (self for singletons,
+    as ``distributed_matching(..., flat=False)`` returns).  Each coarse
+    vertex lives on the owner of its *representative* (min endpoint of
+    the matched pair), so no vertex migrates at a coarsening step; coarse
+    ownership ranges are the prefix sum of per-shard representative
+    counts (identical to ``coarsen.coarse_vtxdist``), and the coarse
+    numbering matches the centralized ``coarsen_once`` bit-for-bit.
+
+    Returns ``(coarse_dg, cmap_sh)`` with cmap_sh[p, i] = coarse global
+    id of fine local vertex i on shard p (-1 on padding).
+    """
+    gid = shard_gids(dg)
+    valid = gid >= 0
+    match = np.where(valid, np.asarray(match_sh, dtype=np.int64), -1)
+    match = np.where(valid & (match >= 0) & (match < dg.n_global),
+                     match, gid)
+    rep = np.minimum(gid, match)
+    is_rep = valid & (rep == gid)
+    counts = is_rep.sum(axis=1).astype(np.int64)
+    cvtxdist = np.concatenate([[0], np.cumsum(counts)])
+
+    crank = (np.cumsum(is_rep.reshape(-1)) - 1).reshape(is_rep.shape)
+    cmap_rep = np.where(is_rep, crank, np.int64(-1))
+    # non-representatives read their mate's coarse id from its owner (the
+    # mate is always the representative: rep = min of the pair)
+    cmap_mate = pull_by_gid(dg, cmap_rep, match, fill=-1)
+    cmap_sh = np.where(is_rep, cmap_rep, cmap_mate)
+    assert int((cmap_sh[valid] < 0).sum()) == 0, \
+        "match_sh is not an involution (mate's mate differs); pass a " \
+        "matching from distributed_matching or repair symmetry first"
+    cmap_sh = np.where(valid, cmap_sh, -1)
+
+    cmap_flat = cmap_sh.reshape(-1)[valid.reshape(-1)]   # by fine gid
+    nc = int(cvtxdist[-1])
+    cvwgt = np.zeros(nc, dtype=np.int64)
+    np.add.at(cvwgt, cmap_flat, _raster_flat(dg, dg.vwgt))
+    src, dst, w = dgraph_arcs(dg)
+    cs, cd = cmap_flat[src], cmap_flat[dst]
+    ka = cs != cd                        # drop collapsed pairs
+    cdg = _build_dgraph(cvtxdist, cs[ka], cd[ka], w[ka], cvwgt,
+                        bucket=bucket)
+    return cdg, cmap_sh
 
 
 # ------------------------------------------------------------------ #
@@ -373,8 +680,8 @@ def _matching_jit(nparts: int, n_loc_max: int, dmax: int, n_ghost_max: int,
     return jax.jit(fn)
 
 
-def distributed_matching(dg: DGraph, seed: int, rounds: int = 8
-                         ) -> np.ndarray:
+def distributed_matching(dg: DGraph, seed: int, rounds: int = 8,
+                         flat: bool = True) -> np.ndarray:
     """Synchronous probabilistic heavy-edge matching across shards.
 
     The paper's request/grant protocol (§3.2) with the collectives of this
@@ -383,10 +690,14 @@ def distributed_matching(dg: DGraph, seed: int, rounds: int = 8
     mask); proposals are gathered; every shard grants the best proposal for
     each of its local acceptors; grants are gathered back and both ends
     commit.  Coin flips and tiebreaks are hashes of (gid, round, seed), so
-    every shard evaluates any vertex's state without extra messages.
+    every shard evaluates any vertex's state without extra messages — and
+    the result is independent of the shard layout.
 
-    Returns the matching as a flat global (n,) array with match[v] = v for
-    singletons — same contract as ``matching.heavy_edge_matching``.
+    With ``flat`` (legacy contract) the matching is gathered into a flat
+    global (n,) array with match[v] = v for singletons — same contract as
+    ``matching.heavy_edge_matching``.  With ``flat=False`` it stays
+    sharded: (P, n_loc_max) mate global ids (-1 on padding), the form
+    ``dgraph_coarsen`` consumes — no centralization at any size.
     """
     fn = _matching_jit(dg.nparts, dg.n_loc_max, dg.nbr_gst.shape[2],
                        dg.ghost_gid.shape[1], rounds)
@@ -395,10 +706,14 @@ def distributed_matching(dg: DGraph, seed: int, rounds: int = 8
            jnp.asarray(dg.vtxdist, jnp.int32),
            jnp.asarray(dg.n_loc, jnp.int32),
            jnp.asarray([seed & 0x7FFFFFFF], jnp.int32))
-    mg = unshard_vector(dg, np.asarray(m)).astype(np.int64)
-    v = np.arange(dg.n_global, dtype=np.int64)
-    mg = np.where((mg < 0) | (mg >= dg.n_global), v, mg)
-    # defensive symmetry repair (protocol is symmetric by construction)
-    bad = mg[mg] != v
-    mg[bad] = v[bad]
-    return mg
+    gid = shard_gids(dg)
+    valid = gid >= 0
+    m_sh = np.asarray(m).astype(np.int64)
+    m_sh = np.where(valid & (m_sh >= 0) & (m_sh < dg.n_global), m_sh, gid)
+    # defensive symmetry repair (protocol is symmetric by construction):
+    # each vertex checks its mate's mate via an owner-routed pull
+    mate_of_mate = pull_by_gid(dg, m_sh, m_sh, fill=-1)
+    m_sh = np.where(valid & (mate_of_mate == gid), m_sh, gid)
+    if flat:
+        return unshard_vector(dg, m_sh)
+    return m_sh

@@ -1,126 +1,469 @@
-"""Distributed nested dissection (paper §3) on the sharded DGraph layer.
+"""Gather-free distributed nested dissection (paper §2.2 + §3).
 
-End-to-end pipeline for ordering a *distributed* graph: the top levels of
-the ND tree run directly on the sharded representation —
+End-to-end *sharded* ordering pipeline: above the centralization
+thresholds, every structure the recursion touches stays distributed —
 
-  * **distributed multilevel coarsening** — heavy-edge matching over the
-    parts mesh (``dgraph.distributed_matching``: propose/grant rounds with
-    halo exchange of the unmatched mask), coarse-graph build on the host
-    control plane with coarse vertices kept on their representative's owner
-    (``coarsen.coarse_vtxdist``), so successive levels stay shard-aligned;
-  * **fold-dup** (§3.2) — once the average vertex count per process drops
-    below ``fold_threshold``, the process group *actually splits*: each
-    half receives a duplicate of the current coarse graph redistributed
-    over its own parts, and the halves run fully independent multilevel
-    instances; the best projected separator wins when the groups rejoin;
-  * **multi-sequential band refinement** (§3.3) — the separator projected
-    onto each fine level is band-extracted with a *distributed* BFS (one
-    halo exchange per width step), the small band graph is centralized, and
-    ``k`` FM lanes (``fm_refine_multi``) refine perturbed copies, the best
-    one being projected back;
-  * **centralize threshold** (§3.1) — subtrees whose subgraphs fall below
-    ``centralize_threshold`` are gathered and handed, all together, to the
-    ordering service's breadth-first scheduler (``service.scheduler``),
-    which executes their BFS/FM work as bucketed batches across every
+  * **distributed dissection** — separators are computed on the sharded
+    ``DGraph`` (multilevel: ``dgraph.distributed_matching`` +
+    ``dgraph.dgraph_coarsen`` keep coarse vertices on their
+    representative's owner), and the two separated parts are extracted
+    with the *distributed induced subgraph* routine
+    (``dgraph.dgraph_induced``), each redistributed onto its child
+    process group (⌈p/2⌉ / ⌊p/2⌋, paper §3.1) — never through a
+    centralized CSR graph;
+  * **fold-dup** (§3.2) — once vertices per process drop below
+    ``fold_threshold`` the group folds (``dgraph.dgraph_fold``) and two
+    duplicate multilevel instances run with independent seeds; the best
+    projected separator wins at rejoin and is re-refined by the full
+    group;
+  * **sharded band refinement** (§3.3) — the band is extracted *in
+    place* on each shard from the distributed BFS distances
+    (``ell_relax_step`` sweeps, one halo exchange per width step).  Small
+    bands (≤ ``band_central_threshold``) are centralized and refined by
+    k multi-sequential FM lanes exactly as before; large bands stay
+    sharded: each shard refines its local fragment (ghost ring locked,
+    boundary gains read through halo-exchanged parts and weights) in
+    synchronous rounds, with a deterministic hash rule repairing
+    boundary conflicts — all shard fragments of a round run as ONE
+    bucketed ``fm_refine_multi`` dispatch;
+  * **distributed ordering tree** (§2.2) — ``DistOrdering`` records, per
+    ND node, its column-block range in the inverse permutation and, per
+    shard, the locally-held ordering fragments.  Fragment offsets come
+    from prefix sums over per-shard fragment sizes (the paper's offset
+    exchange), so the inverse permutation can be *assembled sharded*
+    (``assemble_sharded``) without ever concatenating it on one host;
+  * **centralize threshold** (§3.1) — subtrees below
+    ``centralize_threshold`` (or whose group folded to one process) are
+    gathered — the only ``to_host`` calls above the coarsest/band sizes —
+    and handed, all together, to the ordering service's breadth-first
+    scheduler, which batches their matching / BFS / FM work across every
     deferred subtree at once.
 
-The host recursion / device data-plane split follows DESIGN.md §2; §4
-documents this pipeline.
+Per-host memory is O(n/p + thresholds): the gather-free tests run the
+driver under ``dgraph.track_gathers()`` and assert no centralizing
+gather ever exceeds the configured thresholds.  DESIGN.md §4 documents
+the pipeline; §4.1 maps the paper's ordering-tree concepts onto
+``DistOrdering``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.band import extract_band, project_band
-from repro.core.coarsen import coarse_vtxdist, coarsen_once
-from repro.core.dgraph import (DGraph, distribute, distributed_bfs,
-                               distributed_matching, shard_vector, to_host,
-                               unshard_vector)
-from repro.core.fm import refine_parts, separator_is_valid
+from repro.core.band import band_graph_with_anchors
+from repro.core.dgraph import (DGraph, dgraph_coarsen, dgraph_fold,
+                               dgraph_induced, distributed_bfs,
+                               distributed_matching, halo_exchange_fn,
+                               pull_by_gid, reshard_vector, scatter_by_gid,
+                               shard_gids, shard_vector, to_host,
+                               unshard_vector, valid_mask)
+from repro.core.fm import (FMWork, execute_fm_works, fm_lane_count,
+                           refine_parts, separator_is_valid)
 from repro.core.graph import Graph
 from repro.core.initsep import initial_parts
 from repro.core.nd import (NDConfig, child_nprocs, child_seeds,
-                           component_seed, compute_separator,
-                           resolve_separator, separator_perm,
-                           split_by_separator)
-from repro.core.ordering import Ordering
+                           compute_separator, separator_perm)
 from repro.util import mix_seeds
 
 
 @dataclasses.dataclass
 class DNDConfig(NDConfig):
-    """NDConfig + the distributed-pipeline knobs."""
+    """NDConfig + the distributed-pipeline knobs.
+
+    ``centralize_threshold``: subtrees below this size are gathered and
+    deferred to the batched sequential endgame (§3.1).
+    ``band_central_threshold``: bands at most this size are centralized
+    for multi-sequential FM; larger bands are refined sharded.
+    ``band_sync_rounds`` / ``band_shard_lanes``: synchronous halo-sync
+    rounds and FM lanes per shard of the sharded band refinement.
+    """
     centralize_threshold: int = 256     # below: gather + defer to scheduler
     match_rounds: int = 8               # distributed matching rounds
     min_reduction: float = 0.97         # coarsening stall bound
+    band_central_threshold: int = 2048  # bands ≤ this centralize (§3.3)
+    band_sync_rounds: int = 2           # sharded-band halo-sync rounds
+    band_shard_lanes: int = 4           # FM lanes per shard (sharded band)
+
+
+# ------------------------------------------------------------------ #
+# distributed ordering tree (paper §2.2)
+# ------------------------------------------------------------------ #
+@dataclasses.dataclass
+class DistNode:
+    """One ND node: a column-block range of the inverse permutation.
+
+    ``start`` / ``size`` delimit the global index range this node's
+    subtree orders — fixed at dissection time from the separated part
+    sizes, so no later exchange is needed to place fragments.
+    """
+    parent: int
+    start: int
+    size: int
+    kind: str = "nd"                # "nd" | "sep"
 
 
 @dataclasses.dataclass
-class _Deferred:
-    """One centralized subtree, ordered later by the batched scheduler."""
-    g: Graph
-    gids: np.ndarray
-    seed: int
-    nproc: int
-    node: object
+class DistFragment:
+    """One shard-held piece of the inverse permutation.
+
+    ``gids`` are original global vertex ids in elimination order;
+    ``start`` is the fragment's absolute position (node column-block
+    start + the prefix-sum offset of the preceding shards' pieces);
+    ``shard`` records which process holds the piece.
+    """
+    node: int
     start: int
+    shard: int
+    gids: np.ndarray
+
+
+class DistOrdering:
+    """Distributed ordering tree: fragments + column-block ranges (§2.2).
+
+    Mirrors the paper's structure: "a distributed tree ... every process
+    holds the fragments of the inverse permutation computed by the
+    subtrees it took part in".  Each ND node carries its column-block
+    range; leaves carry per-shard fragments whose absolute offsets are
+    prefix sums of fragment sizes — so the inverse permutation exists as
+    shard-local slices (``assemble_sharded``) and is only concatenated
+    on one host when the caller explicitly asks (``assemble``).
+    """
+
+    root = 0
+
+    def __init__(self, n: int, nparts: int):
+        self.n = int(n)
+        self.nparts = max(int(nparts), 1)
+        self.nodes: List[DistNode] = [DistNode(-1, 0, self.n)]
+        self.frags: List[DistFragment] = []
+
+    # -------------------------------------------------------------- #
+    def add_node(self, parent: int, start: int, size: int,
+                 kind: str = "nd") -> int:
+        """Create a child node covering [start, start+size); returns id."""
+        pn = self.nodes[parent]
+        assert pn.start <= start and start + size <= pn.start + pn.size, \
+            "child column block escapes parent range"
+        self.nodes.append(DistNode(parent, int(start), int(size), kind))
+        return len(self.nodes) - 1
+
+    def column_block(self, node_id: int) -> Tuple[int, int]:
+        """The node's [start, end) range in the inverse permutation."""
+        nd = self.nodes[node_id]
+        return nd.start, nd.start + nd.size
+
+    def add_fragment(self, node_id: int, gids: np.ndarray,
+                     shard: int) -> None:
+        """Attach one whole-node fragment held by ``shard``."""
+        nd = self.nodes[node_id]
+        assert len(gids) == nd.size, "fragment does not cover its node"
+        self.frags.append(DistFragment(node_id, nd.start, int(shard),
+                                       np.asarray(gids, np.int64)))
+
+    def add_sharded_fragments(self, node_id: int,
+                              pieces: Sequence[np.ndarray]) -> None:
+        """Attach one fragment per shard; offsets by prefix-sum exchange.
+
+        ``pieces[q]`` is shard q's locally-held, locally-ordered slice of
+        the node's sub-ordering.  Absolute starts are the exclusive
+        prefix sum of piece sizes over shard rank — the offset exchange
+        the paper performs to glue ordering-tree fragments.
+        """
+        nd = self.nodes[node_id]
+        sizes = [len(p) for p in pieces]
+        assert sum(sizes) == nd.size, "shard pieces do not cover the node"
+        offs = np.concatenate([[0], np.cumsum(sizes)])
+        for q, piece in enumerate(pieces):
+            if len(piece):
+                self.frags.append(DistFragment(
+                    node_id, nd.start + int(offs[q]), q,
+                    np.asarray(piece, np.int64)))
+
+    # -------------------------------------------------------------- #
+    def assemble(self) -> np.ndarray:
+        """Concatenate all fragments into the flat inverse permutation.
+
+        perm[k] = original vertex eliminated k-th.  This is the explicit
+        centralization step (for benchmarks / host consumers); the
+        pipeline itself never calls it — use ``assemble_sharded`` to keep
+        the result distributed.
+        """
+        perm = np.empty(self.n, dtype=np.int64)
+        seen = 0
+        for f in sorted(self.frags, key=lambda f: f.start):
+            assert f.start == seen, (
+                f"fragment at {f.start} overlaps/gaps previous end {seen}")
+            perm[f.start:f.start + len(f.gids)] = f.gids
+            seen += len(f.gids)
+        assert seen == self.n, f"fragments cover {seen} of {self.n}"
+        return perm
+
+    def assemble_sharded(self, vtxdist: Optional[np.ndarray] = None
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-shard slices of the inverse permutation (no concatenation).
+
+        Shard q receives global positions [vtxdist[q], vtxdist[q+1]) of
+        the inverse permutation (balanced blocks by default).  Every
+        fragment knows its absolute start, so routing is a pure local
+        write per (fragment, overlapping shard) pair — the paper's
+        offset-exchange assembly.  Returns ``(slices, vtxdist)`` where
+        ``slices`` is (P, max_slice) with -1 padding.
+        """
+        if vtxdist is None:
+            vtxdist = np.linspace(0, self.n, self.nparts + 1
+                                  ).astype(np.int64)
+        vtxdist = np.asarray(vtxdist, np.int64)
+        P = len(vtxdist) - 1
+        width = int(np.diff(vtxdist).max()) if P else 0
+        out = -np.ones((P, max(width, 1)), dtype=np.int64)
+        for f in self.frags:
+            lo, hi = f.start, f.start + len(f.gids)
+            q = int(np.searchsorted(vtxdist, lo, side="right") - 1)
+            q = max(q, 0)
+            while q < P and vtxdist[q] < hi:
+                a, b = max(lo, int(vtxdist[q])), min(hi, int(vtxdist[q + 1]))
+                if a < b:
+                    out[q, a - vtxdist[q]:b - vtxdist[q]] = \
+                        f.gids[a - lo:b - lo]
+                q += 1
+        return out, vtxdist
+
+    def fragment_shards(self) -> np.ndarray:
+        """Number of fragments held per shard (bookkeeping / tests)."""
+        counts = np.zeros(self.nparts, dtype=np.int64)
+        for f in self.frags:
+            counts[f.shard % self.nparts] += 1
+        return counts
 
 
 # ------------------------------------------------------------------ #
-# separator quality (best-projected-separator-wins selection)
+# separator quality (best-projected-separator-wins, sharded)
 # ------------------------------------------------------------------ #
-def _eval_part(g: Graph, part: np.ndarray, eps_frac: float
-               ) -> Tuple[float, float, float]:
+def _eval_part_sh(dg: DGraph, part_sh: np.ndarray, eps_frac: float
+                  ) -> Tuple[float, float, float]:
     """(score, sep_w, imb): min separator weight among balance-feasible."""
-    w0 = float(g.vwgt[part == 0].sum())
-    w1 = float(g.vwgt[part == 1].sum())
-    ws = float(g.vwgt[part == 2].sum())
+    v = valid_mask(dg)
+    vw = dg.vwgt
+    w0 = float(vw[v & (part_sh == 0)].sum())
+    w1 = float(vw[v & (part_sh == 1)].sum())
+    ws = float(vw[v & (part_sh == 2)].sum())
     imb = abs(w0 - w1)
     total = w0 + w1 + ws
     score = ws if imb <= eps_frac * total else ws + total
     return score, ws, imb
 
 
-# ------------------------------------------------------------------ #
-# distributed multilevel separator
-# ------------------------------------------------------------------ #
-def _band_refine_level(g: Graph, dg: DGraph, part: np.ndarray, seed: int,
-                       p_cur: int, cfg: DNDConfig) -> np.ndarray:
-    """§3.3 at one distributed level: sharded BFS + multi-sequential FM.
+def _np_hash(x: np.ndarray, *salts: int) -> np.ndarray:
+    """lowbias32 chain on int arrays (numpy mirror of matching.hash_mix).
 
-    The distance sweep runs on the sharded structure (one halo exchange
-    per width step); the band graph it selects is small (O(n^{2/3}) for
-    meshes), so it is centralized and refined by k perturbed FM lanes —
-    the best lane's separator is projected back.
+    Both endpoints' owners evaluate the same symmetric conflict-repair
+    rule from global ids alone — no extra messages, like the matching
+    protocol's coins.
     """
-    # lane count mirrors nd.separator_task's non-strict path: one FM lane
-    # per process of the group under fold-dup (p_cur >= 2 here — folded
-    # instances go through compute_separator), else the host floor of 2
-    k_fm = int(np.clip(p_cur, 2, cfg.k_fm_cap)) if cfg.fold_dup else 2
-    if not cfg.use_band:
+    def lb(v):
+        v = v ^ (v >> np.uint32(16))
+        v = v * np.uint32(0x7FEB352D)
+        v = v ^ (v >> np.uint32(15))
+        v = v * np.uint32(0x846CA68B)
+        return v ^ (v >> np.uint32(16))
+
+    h = np.full(np.shape(x), 0x9E3779B9, dtype=np.uint32)
+    for v in (x,) + salts:
+        v = np.asarray(v).astype(np.uint32)
+        h = lb(h ^ (v * np.uint32(0x85EBCA6B) + np.uint32(1)))
+    return h
+
+
+# ------------------------------------------------------------------ #
+# band refinement (§3.3): centralized below threshold, sharded above
+# ------------------------------------------------------------------ #
+def _centralize_band(dg: DGraph, part_sh: np.ndarray, dist_sh: np.ndarray,
+                     seed: int, k_fm: int, cfg: DNDConfig) -> np.ndarray:
+    """Multi-sequential FM on the centralized band (small bands).
+
+    The band subgraph is extracted in place (``dgraph_induced`` with
+    ownership preserved), gathered — the band is O(n^{2/3}) on meshes,
+    far below ``band_central_threshold`` — and refined by ``k_fm``
+    perturbed FM lanes; the winning separator is scattered back to the
+    owners.  Constructs the exact FM problem ``band.extract_band`` would
+    (shared ``band_graph_with_anchors``), so this path is bit-identical
+    to the centralized pipeline.
+    """
+    width = cfg.band_width
+    v = valid_mask(dg)
+    keep = v & (dist_sh <= width)
+    band_dg, (bpart_sh, bdist_sh, bgid_sh) = dgraph_induced(
+        dg, keep, payloads=(part_sh, dist_sh, shard_gids(dg)),
+        fills=(3, 0, -1))
+    g_band = to_host(band_dg)
+    bpart = unshard_vector(band_dg, bpart_sh).astype(np.int8)
+    bdist = unshard_vector(band_dg, bdist_sh)
+    bgid = unshard_vector(band_dg, bgid_sh)
+
+    out = v & ~keep
+    w_out0 = int(dg.vwgt[out & (part_sh == 0)].sum())
+    w_out1 = int(dg.vwgt[out & (part_sh == 1)].sum())
+    band, bpart_full, locked = band_graph_with_anchors(
+        g_band, bpart, bdist, width, w_out0, w_out1)
+    nbr_b, _ = band.to_ell()
+    bref, _, _ = refine_parts(
+        nbr_b, band.vwgt, bpart_full, locked, mix_seeds(seed, 7),
+        k_inst=k_fm, eps_frac=cfg.eps_frac, passes=cfg.fm_passes, n_pert=8)
+    assert separator_is_valid(nbr_b, bref)
+
+    return scatter_by_gid(dg, part_sh, bgid, bref[:g_band.n])
+
+
+def _sharded_band_fm(dg: DGraph, part_sh: np.ndarray, keep_sh: np.ndarray,
+                     dist_sh: np.ndarray, seed: int,
+                     cfg: DNDConfig) -> np.ndarray:
+    """Shard-local band FM with halo-exchanged boundary state (§3.3).
+
+    The band stays sharded: each shard refines the fragment it owns,
+    with its ghost ring present but *locked* (remote-owned vertices
+    cannot be moved locally) and per-side anchors carrying the rest of
+    the graph's weight, so boundary gains and global balance are exact
+    up to the neighbors' concurrent moves.  ``band_sync_rounds``
+    synchronous rounds: all shard fragments execute as one bucketed
+    ``fm_refine_multi`` dispatch, owners' parts are halo-refreshed, and
+    any 0–1 edge created by concurrent boundary moves is repaired by a
+    deterministic symmetric hash rule (the losing endpoint returns to
+    the separator — validity is restored without extra messages).
+    """
+    width = cfg.band_width
+    band_dg, (bpart_sh, bdist_sh, bgid_sh) = dgraph_induced(
+        dg, keep_sh, payloads=(part_sh, dist_sh, shard_gids(dg)),
+        fills=(3, 0, -1))
+    P = band_dg.nparts
+    nlm = band_dg.n_loc_max
+    halo = halo_exchange_fn(band_dg)
+    vwgt_ext = np.asarray(halo(band_dg.vwgt.astype(np.int32)))
+    band_gid = shard_gids(band_dg)      # band-graph ids (conflict hashing)
+
+    # out-of-band side weights never change during band refinement; the
+    # in-band side weights do, so global totals recompute every round
+    v_full = valid_mask(dg)
+    out_full = v_full & ~np.asarray(keep_sh, bool)
+    w_out = [int(dg.vwgt[out_full & (part_sh == s)].sum()) for s in (0, 1)]
+    vb = valid_mask(band_dg)
+    bpart = np.asarray(bpart_sh, np.int8).copy()
+    bdist = np.asarray(bdist_sh)
+
+    for r in range(cfg.band_sync_rounds):
+        w_glob = [w_out[s] + int(band_dg.vwgt[vb & (bpart == s)].sum())
+                  for s in (0, 1)]
+        part_ext = np.asarray(halo(bpart.astype(np.int32)))
+        works: List[FMWork] = []
+        shards: List[int] = []
+        for p in range(P):
+            n_p = int(band_dg.n_loc[p])
+            if n_p == 0:
+                continue
+            G_p = int(band_dg.n_ghost[p])
+            rows = band_dg.nbr_gst[p, :n_p]
+            li, sl = np.nonzero(rows >= 0)
+            c = rows[li, sl].astype(np.int64)
+            tgt = np.where(c < nlm, c, n_p + (c - nlm))
+            edges = np.stack([li, tgt], 1)
+            ldist = bdist[p, :n_p]
+            lpart = bpart[p, :n_p]
+            gpart = part_ext[p, nlm:nlm + G_p]
+            a0, a1 = n_p + G_p, n_p + G_p + 1
+            for s, a in ((0, a0), (1, a1)):
+                ll = np.nonzero((ldist == width) & (lpart == s))[0]
+                if len(ll):
+                    edges = np.concatenate(
+                        [edges, np.stack([np.full(len(ll), a), ll], 1)])
+            frag = Graph.from_edges(n_p + G_p + 2, edges)
+            lw = band_dg.vwgt[p, :n_p]
+            gw = vwgt_ext[p, nlm:nlm + G_p]
+            frag_w = [int(lw[lpart == s].sum()) + int(gw[gpart == s].sum())
+                      for s in (0, 1)]
+            vwgt_f = np.concatenate(
+                [lw, gw, [max(0, w_glob[0] - frag_w[0]),
+                          max(0, w_glob[1] - frag_w[1])]])
+            part_f = np.concatenate([lpart, gpart, [0, 1]]).astype(np.int8)
+            locked = np.zeros(n_p + G_p + 2, bool)
+            locked[n_p:] = True                 # ghosts + anchors
+            nbr_f, _ = frag.to_ell()
+            works.append(FMWork(
+                nbr=nbr_f, vwgt=vwgt_f, part=part_f, locked=locked,
+                seed=mix_seeds(seed, 41, r, p),
+                k_inst=cfg.band_shard_lanes, eps_frac=cfg.eps_frac,
+                passes=cfg.fm_passes, n_pert=8))
+            shards.append(p)
+        if not works:
+            break
+        for p, (pf, _, _) in zip(shards, execute_fm_works(works)):
+            n_p = int(band_dg.n_loc[p])
+            bpart[p, :n_p] = pf[:n_p]
+
+        # conflict repair: concurrent boundary moves may have created a
+        # 0–1 edge across shards; the endpoint losing the symmetric hash
+        # rule returns to the separator (both owners compute the same
+        # winner from the two gids alone)
+        part_ext = np.asarray(halo(bpart.astype(np.int32)))
+        p_all, li_all, sl_all = np.nonzero(band_dg.nbr_gst >= 0)
+        c_all = band_dg.nbr_gst[p_all, li_all, sl_all].astype(np.int64)
+        gh = c_all >= nlm
+        pg, lig, cg = p_all[gh], li_all[gh], c_all[gh]
+        lp = bpart[pg, lig].astype(np.int32)
+        gp_ = part_ext[pg, cg]
+        conflict = ((lp == 0) & (gp_ == 1)) | ((lp == 1) & (gp_ == 0))
+        if conflict.any():
+            pc, lic, cc = pg[conflict], lig[conflict], cg[conflict]
+            vg = band_gid[pc, lic]
+            ug = band_dg.ghost_gid[pc, cc - nlm]
+            hv = _np_hash(vg, r, seed & 0x7FFFFFFF)
+            hu = _np_hash(ug, r, seed & 0x7FFFFFFF)
+            lose_local = (hv < hu) | ((hv == hu) & (vg < ug))
+            bpart[pc[lose_local], lic[lose_local]] = 2
+
+    # project back: each shard writes its refined local band parts to the
+    # owners of the original vertices (carried in the bgid payload)
+    return scatter_by_gid(dg, part_sh, np.asarray(bgid_sh)[vb], bpart[vb])
+
+
+def _band_refine_level_sh(dg: DGraph, part_sh: np.ndarray, seed: int,
+                          p_cur: int, cfg: DNDConfig) -> np.ndarray:
+    """§3.3 at one distributed level: sharded BFS + FM refinement.
+
+    The distance sweep always runs on the sharded structure (one halo
+    exchange per width step, reusing ``ell_relax_step``); the refinement
+    path depends on the band size: centralized multi-sequential lanes
+    below ``band_central_threshold``, shard-local FM above.
+    """
+    k_fm = fm_lane_count(p_cur, cfg.k_fm_cap, cfg.fold_dup)
+    v = valid_mask(dg)
+    if cfg.use_band:
+        dist_sh = np.asarray(distributed_bfs(
+            dg, (part_sh == 2).astype(np.int32), cfg.band_width))
+        dist_sh = np.where(v, dist_sh, np.int32(2 ** 30))
+        keep = v & (dist_sh <= cfg.band_width)
+    else:                               # ablation: refine the whole level
+        dist_sh = np.zeros_like(part_sh, dtype=np.int32)
+        keep = v
+    band_n = int(keep.sum())
+    if band_n + 2 <= cfg.band_central_threshold or dg.nparts == 1:
+        if cfg.use_band:
+            return _centralize_band(dg, part_sh, dist_sh, seed, k_fm, cfg)
+        g = to_host(dg)
+        part = unshard_vector(dg, part_sh).astype(np.int8)
         nbr_f, _ = g.to_ell()
-        part2, _, _ = refine_parts(
+        part, _, _ = refine_parts(
             nbr_f, g.vwgt, part, np.zeros(g.n, bool), mix_seeds(seed, 7),
             k_inst=k_fm, eps_frac=cfg.eps_frac, passes=cfg.fm_passes,
             n_pert=8)
-        assert separator_is_valid(nbr_f, part2)
-        return part2
-    dist_sh = distributed_bfs(dg, shard_vector(dg, part == 2),
-                              cfg.band_width)
-    dist = unshard_vector(dg, dist_sh)
-    band, bpart, locked, old_ids = extract_band(
-        g, part, width=cfg.band_width, dist=dist)
-    nbr_b, _ = band.to_ell()
-    bpart, _, _ = refine_parts(
-        nbr_b, band.vwgt, bpart, locked, mix_seeds(seed, 7), k_inst=k_fm,
-        eps_frac=cfg.eps_frac, passes=cfg.fm_passes, n_pert=8)
-    assert separator_is_valid(nbr_b, bpart)
-    return project_band(part, bpart, old_ids)
+        assert separator_is_valid(nbr_f, part)
+        return shard_vector(dg, part, fill=3)
+    return _sharded_band_fm(dg, part_sh, keep, dist_sh, seed, cfg)
 
 
+# ------------------------------------------------------------------ #
+# distributed multilevel separator
+# ------------------------------------------------------------------ #
 def _coarsest_separator(g: Graph, seed: int, cfg: DNDConfig
                         ) -> Optional[np.ndarray]:
     """Initial separator on a (centralized) coarsest graph."""
@@ -136,137 +479,247 @@ def _coarsest_separator(g: Graph, seed: int, cfg: DNDConfig
     return part
 
 
-def _dsep(g: Graph, dg: Optional[DGraph], p_cur: int, seed: int,
-          cfg: DNDConfig, inst_budget: int) -> Optional[np.ndarray]:
-    """Multilevel separator of g, distributed over p_cur parts.
+def _centralized_part(dg: DGraph, part: Optional[np.ndarray]
+                      ) -> Optional[np.ndarray]:
+    """Shard a host-computed part vector back onto dg's layout."""
+    if part is None:
+        return None
+    return shard_vector(dg, part.astype(np.int8), fill=3)
 
-    Returns the refined part vector of g (0/1/2) or None when degenerate.
-    ``inst_budget`` caps the fold-dup instance tree (paper: "resort to
-    folding only when ... reaches some minimum threshold" — here also a
-    memory cap, mirroring ``coarsen_multilevel``'s ``max_instances``).
+
+def _dsep_sh(dg: DGraph, seed: int, cfg: DNDConfig,
+             inst_budget: int) -> Optional[np.ndarray]:
+    """Multilevel separator of a sharded graph (part vector stays sharded).
+
+    Returns a (P, n_loc_max) int8 part vector (0/1/2, 3 on padding) or
+    None when degenerate.  ``inst_budget`` caps the fold-dup instance
+    tree (paper: "resort to folding only when ... reaches some minimum
+    threshold" — here also a memory cap, mirroring
+    ``coarsen_multilevel``'s ``max_instances``).  Centralization only
+    happens at bounded sizes: fully-folded instances (n < 2·fold
+    threshold) and coarsest graphs (n ≤ coarse_target).
     """
-    if p_cur <= 1:
+    p, n = dg.nparts, dg.n_global
+    if n < 4:
+        return None
+    if p <= 1:
         # a fully-folded instance: one process, the sequential pipeline
-        return compute_separator(g, seed, 1, cfg)
-    if g.n <= cfg.coarse_target:
-        return _coarsest_separator(g, seed, cfg)
+        return _centralized_part(dg, compute_separator(to_host(dg), seed,
+                                                       1, cfg))
+    if n <= cfg.coarse_target:
+        return _centralized_part(dg, _coarsest_separator(to_host(dg), seed,
+                                                         cfg))
 
-    if cfg.fold_dup and g.n / p_cur < cfg.fold_threshold and inst_budget >= 2:
-        # fold-dup: the group splits; each half holds a duplicate of g
-        # redistributed over its own parts and runs an independent
-        # multilevel instance.  Best projected separator wins (§3.2).
-        pa, pb = child_nprocs(p_cur)
-        sa, sb = mix_seeds(seed, 11), mix_seeds(seed, 12)
+    if cfg.fold_dup and n / p < cfg.fold_threshold and inst_budget >= 2:
+        # fold-dup: the group splits; each half holds a duplicate of the
+        # folded structure and runs an independent multilevel instance.
+        # Best projected separator wins at rejoin (§3.2).
+        dgf = dgraph_fold(dg)
         cand: List[np.ndarray] = []
-        for p_half, s_half in ((pa, sa), (pb, sb)):
-            dg_half = distribute(g, p_half) if p_half > 1 else None
-            part = _dsep(g, dg_half, p_half, s_half, cfg, inst_budget // 2)
-            if part is not None:
-                cand.append(part)
+        for s_half in (mix_seeds(seed, 11), mix_seeds(seed, 12)):
+            ph = _dsep_sh(dgf, s_half, cfg, inst_budget // 2)
+            if ph is not None:
+                cand.append(ph)
         if not cand:
             return None
-        best = min(cand, key=lambda p: _eval_part(g, p, cfg.eps_frac)[0])
+        best = min(cand,
+                   key=lambda q: _eval_part_sh(dgf, q, cfg.eps_frac)[0])
         # the rejoined group refines the winning duplicate's separator at
         # the fold level with its full complement of FM lanes (§3.3)
-        if dg is None:
-            dg = distribute(g, p_cur)
-        return _band_refine_level(g, dg, best, mix_seeds(seed, 13), p_cur,
-                                  cfg)
+        part_sh = reshard_vector(dgf, dg, best, fill=3)
+        return _band_refine_level_sh(dg, part_sh, mix_seeds(seed, 13), p,
+                                     cfg)
 
-    if dg is None:
-        dg = distribute(g, p_cur)
-    match = distributed_matching(dg, mix_seeds(seed, 5), cfg.match_rounds)
-    cg, cmap = coarsen_once(g, match)
-    if cg.n > g.n * cfg.min_reduction:          # stalled coarsening
-        return _coarsest_separator(g, seed, cfg)
-    # coarse vertices stay on their representative's owner: the coarse
-    # level is shard-aligned without moving any vertex between shards
-    cvtx = coarse_vtxdist(dg.vtxdist, match)
-    cdg = distribute(cg, p_cur, vtxdist=cvtx)
-    part_c = _dsep(cg, cdg, p_cur, mix_seeds(seed, 101), cfg, inst_budget)
+    match_sh = distributed_matching(dg, mix_seeds(seed, 5),
+                                    cfg.match_rounds, flat=False)
+    cdg, cmap_sh = dgraph_coarsen(dg, match_sh)
+    if cdg.n_global > n * cfg.min_reduction:    # stalled coarsening
+        if n <= max(cfg.centralize_threshold, cfg.coarse_target):
+            return _centralized_part(dg, _coarsest_separator(to_host(dg),
+                                                             seed, cfg))
+        if cdg.n_global >= n:
+            return None
+        # slow but nonzero progress on a big graph: keep going sharded
+    part_c = _dsep_sh(cdg, mix_seeds(seed, 101), cfg, inst_budget)
     if part_c is None:
         return None
-    part = part_c[cmap].astype(np.int8)
-    return _band_refine_level(g, dg, part, seed, p_cur, cfg)
+    # separator projection: fine vertex reads its coarse vertex's part
+    # from the coarse owner (coarse vertices stayed on their
+    # representative's owner, so most reads are shard-local)
+    part_sh = pull_by_gid(cdg, part_c, cmap_sh, fill=3).astype(np.int8)
+    return _band_refine_level_sh(dg, part_sh, seed, p, cfg)
 
 
-def distributed_separator(g: Graph, dg: DGraph, seed: int, nproc: int,
-                          cfg: DNDConfig) -> Optional[np.ndarray]:
-    """Top-level entry: separator of a distributed graph."""
-    if g.n < 4:
-        return None
-    return _dsep(g, dg, nproc, seed, cfg, max(cfg.k_fm_cap, 1))
+def distributed_separator(dg: DGraph, seed: int,
+                          cfg: Optional[DNDConfig] = None
+                          ) -> Optional[np.ndarray]:
+    """Top-level entry: sharded separator of a distributed graph.
+
+    Returns the (P, n_loc_max) int8 part vector (0/1/2, padding 3) or
+    None when the graph is degenerate.
+    """
+    cfg = cfg or DNDConfig()
+    return _dsep_sh(dg, seed, cfg, max(cfg.k_fm_cap, 1))
+
+
+def _fallback_separator_sh(dg: DGraph) -> np.ndarray:
+    """Validity-first fallback: gid bisection, boundary into separator.
+
+    Mirrors ``nd._fallback_separator``'s role when the multilevel
+    heuristic degenerates on a big subgraph, without centralizing: side
+    by global-id rank, then every side-1 vertex adjacent to side 0 (ghost
+    parts via one halo exchange) moves into the separator — no 0–1 edge
+    survives, on any shard.
+    """
+    gid = shard_gids(dg)
+    valid = gid >= 0
+    part = np.where(gid < dg.n_global // 2, 0, 1).astype(np.int8)
+    part[~valid] = 3
+    ext = np.asarray(halo_exchange_fn(dg)(part.astype(np.int32)))
+    p, li, sl = np.nonzero(dg.nbr_gst >= 0)
+    c = dg.nbr_gst[p, li, sl].astype(np.int64)
+    nbr_part = ext[p, c]
+    mine = part[p, li]
+    to_sep = (mine == 1) & (nbr_part == 0)
+    part[p[to_sep], li[to_sep]] = 2
+    return part
+
+
+def _resolve_sh(dg: DGraph, part_sh: Optional[np.ndarray],
+                cfg: DNDConfig) -> Optional[np.ndarray]:
+    """Degenerate-separator policy of the sharded recursion."""
+    v = valid_mask(dg)
+
+    def degenerate(ps):
+        return ps is None or min(int(((ps == 0) & v).sum()),
+                                 int(((ps == 1) & v).sum())) == 0
+
+    if degenerate(part_sh):
+        if dg.n_global > 4 * cfg.leaf_size:
+            part_sh = _fallback_separator_sh(dg)
+        if degenerate(part_sh):
+            return None
+    return part_sh
 
 
 # ------------------------------------------------------------------ #
 # distributed ND driver
 # ------------------------------------------------------------------ #
-def distributed_nested_dissection(dg: DGraph, seed: int = 0,
-                                  cfg: Optional[DNDConfig] = None
-                                  ) -> np.ndarray:
-    """Full ordering of a distributed graph.  Returns perm.
+@dataclasses.dataclass
+class _Deferred:
+    """One centralized subtree, ordered later by the batched scheduler."""
+    g: Graph
+    gids: np.ndarray
+    seed: int
+    nproc: int
+    node: int
+    shard: int
 
-    The top levels dissect on the sharded representation; subtrees below
-    ``cfg.centralize_threshold`` are gathered and ordered *together* by the
-    service scheduler's bucketed breadth-first executor, so the sequential
-    endgame of every branch shares its kernel dispatches.
+
+def distributed_nested_dissection(dg: DGraph, seed: int = 0,
+                                  cfg: Optional[DNDConfig] = None,
+                                  return_tree: bool = False):
+    """Full gather-free ordering of a distributed graph.
+
+    Args:
+      dg: the sharded input graph (P shards).
+      seed: deterministic seed; the whole pipeline (matching coins, FM
+        perturbations, tiebreaks) derives from it, so equal (dg, seed,
+        cfg) give identical orderings.
+      cfg: DNDConfig; None uses defaults.
+      return_tree: return the ``DistOrdering`` (fragments stay sharded)
+        instead of the flat permutation.
+
+    The top levels dissect on the sharded representation — no
+    ``to_host`` / ``unshard_vector`` above the configured thresholds, as
+    asserted by the gather-free tests under ``dgraph.track_gathers()``.
+    Subtrees below ``cfg.centralize_threshold`` are gathered and ordered
+    *together* by the service scheduler's bucketed breadth-first
+    executor, so the sequential endgame of every branch shares its
+    matching / BFS / FM dispatches.  Returns perm (perm[k] = vertex
+    eliminated k-th) unless ``return_tree``.
     """
     from repro.service.scheduler import order_batch
     from repro.util import enable_compile_cache
     enable_compile_cache()
     cfg = cfg or DNDConfig()
-    g = to_host(dg)
-    ordering = Ordering(g.n)
+    dord = DistOrdering(dg.n_global, dg.nparts)
     deferred: List[_Deferred] = []
-    _dnd_rec(g, dg, np.arange(g.n, dtype=np.int64), seed, dg.nparts, cfg,
-             ordering, ordering.root, 0, deferred)
+    _dnd_sh(dg, shard_gids(dg), seed, cfg, dord, DistOrdering.root,
+            deferred)
     if deferred:
         perms = order_batch([d.g for d in deferred],
                             [d.seed for d in deferred],
                             [d.nproc for d in deferred],
                             [cfg] * len(deferred))
         for d, perm in zip(deferred, perms):
-            ordering.add_leaf(d.node, d.start, d.gids[perm])
-    perm = ordering.assemble()
-    assert np.array_equal(np.sort(perm), np.arange(g.n)), "not a permutation"
+            dord.add_fragment(d.node, d.gids[perm], d.shard)
+    if return_tree:
+        return dord
+    perm = dord.assemble()
+    assert np.array_equal(np.sort(perm), np.arange(dg.n_global)), \
+        "not a permutation"
     return perm
 
 
-def _dnd_rec(g: Graph, dg: Optional[DGraph], gids: np.ndarray, seed: int,
-             nparts: int, cfg: DNDConfig, ordering: Ordering, node,
-             start: int, deferred: List[_Deferred]) -> None:
-    n = g.n
-    if nparts <= 1 or n <= max(cfg.centralize_threshold, cfg.leaf_size):
-        # §3.1 centralization: the subtree is sequential from here; defer
-        # it so all deferred subtrees batch through the scheduler at once
-        deferred.append(_Deferred(g, gids, seed, nparts, node, start))
+def _defer(dg: DGraph, gids_sh: np.ndarray, seed: int, nproc: int,
+           node_id: int, dord: DistOrdering,
+           deferred: List[_Deferred]) -> None:
+    """§3.1 centralization: gather a sub-threshold subtree for the batch.
+
+    The subtree is assigned (round-robin by node id) to the shard that
+    will hold its ordering fragment in the distributed tree.
+    """
+    g = to_host(dg)
+    gids = unshard_vector(dg, gids_sh)
+    deferred.append(_Deferred(g, gids, seed, nproc, node_id,
+                              node_id % dord.nparts))
+
+
+def _dnd_sh(dg: DGraph, gids_sh: np.ndarray, seed: int, cfg: DNDConfig,
+            dord: DistOrdering, node_id: int,
+            deferred: List[_Deferred]) -> None:
+    p, n = dg.nparts, dg.n_global
+    start = dord.nodes[node_id].start
+    if p <= 1 or n <= max(cfg.centralize_threshold, cfg.leaf_size):
+        # the subtree is sequential from here; defer it so all deferred
+        # subtrees batch through the scheduler at once
+        _defer(dg, gids_sh, seed, p, node_id, dord, deferred)
         return
-    comp = g.components()
-    ncomp = int(comp.max()) + 1
-    if ncomp > 1:                       # independent parts: no separator
-        off = start
-        for c in range(ncomp):
-            sub, old = g.induced_subgraph(comp == c)
-            child = ordering.add_internal(node, off, sub.n)
-            _dnd_rec(sub, None, gids[old], component_seed(seed, c), nparts,
-                     cfg, ordering, child, off, deferred)
-            off += sub.n
+    part_sh = _resolve_sh(dg, distributed_separator(dg, seed, cfg), cfg)
+    if part_sh is None:
+        _defer(dg, gids_sh, seed, 1, node_id, dord, deferred)
         return
-    if dg is None:
-        dg = distribute(g, nparts)
-    part = distributed_separator(g, dg, seed, nparts, cfg)
-    part = resolve_separator(g, seed, part, cfg)
-    if part is None:
-        deferred.append(_Deferred(g, gids, seed, 1, node, start))
-        return
-    (g0, old0), (g1, old1), (gs, olds) = split_by_separator(g, part)
-    p0, p1 = child_nprocs(nparts)
+    v = valid_mask(dg)
+    n0 = int(((part_sh == 0) & v).sum())
+    n1 = int(((part_sh == 1) & v).sum())
+    ns = n - n0 - n1
+    p0, p1 = child_nprocs(p)
     s0, s1 = child_seeds(seed)
-    c0 = ordering.add_internal(node, start, g0.n)
-    _dnd_rec(g0, None, gids[old0], s0, p0, cfg, ordering, c0, start,
-             deferred)
-    c1 = ordering.add_internal(node, start + g0.n, g1.n)
-    _dnd_rec(g1, None, gids[old1], s1, p1, cfg, ordering, c1,
-             start + g0.n, deferred)
-    sperm = separator_perm(gs, seed)
-    ordering.add_leaf(node, start + g0.n + g1.n, gids[olds[sperm]], "sep")
+    # distributed induced subgraphs, each redistributed onto its child
+    # process group (§3.1: part 0 onto ⌈p/2⌉ processes, part 1 onto ⌊p/2⌋)
+    dg0, (g0ids,) = dgraph_induced(dg, (part_sh == 0) & v, nparts=p0,
+                                   payloads=(gids_sh,), fills=(-1,))
+    dg1, (g1ids,) = dgraph_induced(dg, (part_sh == 1) & v, nparts=p1,
+                                   payloads=(gids_sh,), fills=(-1,))
+    c0 = dord.add_node(node_id, start, n0)
+    _dnd_sh(dg0, g0ids, s0, cfg, dord, c0, deferred)
+    c1 = dord.add_node(node_id, start + n0, n1)
+    _dnd_sh(dg1, g1ids, s1, cfg, dord, c1, deferred)
+
+    # separator ordered last (highest indices of the column block)
+    if ns == 0:
+        return
+    snode = dord.add_node(node_id, start + n0 + n1, ns, "sep")
+    if ns <= max(cfg.centralize_threshold, cfg.leaf_size):
+        dgs, (sgids_sh,) = dgraph_induced(dg, (part_sh == 2) & v, nparts=1,
+                                          payloads=(gids_sh,), fills=(-1,))
+        gs = to_host(dgs)
+        sgids = unshard_vector(dgs, sgids_sh)
+        dord.add_fragment(snode, sgids[separator_perm(gs, seed)],
+                          node_id % dord.nparts)
+    else:
+        # huge separator: each shard keeps its local fragment, ordered by
+        # local id; offsets by the §2.2 prefix-sum exchange
+        pieces = [gids_sh[q][v[q] & (part_sh[q] == 2)] for q in range(p)]
+        dord.add_sharded_fragments(snode, pieces)

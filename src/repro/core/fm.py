@@ -148,6 +148,23 @@ def _pulled_all(nbrs, valid, vwgt_f, part, gain_mode: str):
     return _pulled_jnp(nbrs, valid, vwgt_f, part)
 
 
+def fm_lane_count(nproc: int, cap: int, fold_dup: bool,
+                  strict: bool = False) -> int:
+    """Multi-sequential FM lane count for a process group of ``nproc``.
+
+    The paper runs one independent sequential FM instance per process of
+    the group refining a band (§3.3); ``cap`` bounds the lane memory,
+    ``fold_dup=False`` (ablation) keeps the host floor of two lanes, and
+    ``strict`` (the ParMETIS-like baseline) runs a single lane.  Shared by
+    the sequential pipeline and the distributed band refinement so both
+    derive identical lane counts.
+    """
+    if strict:
+        return 1
+    k = int(np.clip(nproc, 1, cap)) if fold_dup else 1
+    return max(k, 2)
+
+
 def gain_mode_default() -> str:
     """FM gain-recompute backend: REPRO_FM_GAIN=jnp|pallas|auto.
 

@@ -120,6 +120,19 @@ def heavy_edge_matching(nbr: jax.Array, wgt: jax.Array, key: jax.Array,
     return jnp.where(match < 0, vid, match)                     # singletons
 
 
+@functools.partial(jax.jit, static_argnames=("rounds",))
+def heavy_edge_matching_multi(nbr: jax.Array, wgt: jax.Array,
+                              keys: jax.Array, rounds: int = 8) -> jax.Array:
+    """Lane-batched ``heavy_edge_matching``: (L, n, d) ELL bucket → (L, n).
+
+    A ``vmap`` over independent lanes; per-lane results are identical to
+    the single-graph kernel with the same key, so the service's bucketed
+    matching waves are result-compatible with per-subproblem dispatch.
+    """
+    return jax.vmap(lambda nb, wg, k: heavy_edge_matching(
+        nb, wg, k, rounds=rounds))(nbr, wgt, keys)
+
+
 def validate_matching(match: np.ndarray) -> bool:
     """match is an involution: match[match[v]] == v."""
     match = np.asarray(match)

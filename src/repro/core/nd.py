@@ -27,15 +27,17 @@ import numpy as np
 
 from repro.core.band import BFSWork, execute_bfs_works, extract_band, \
     project_band
-from repro.core.coarsen import coarsen_multilevel
-from repro.core.fm import FMWork, execute_fm_works, separator_is_valid
+from repro.core.coarsen import MatchWork, coarsen_multilevel_task, \
+    execute_match_works
+from repro.core.fm import FMWork, execute_fm_works, fm_lane_count, \
+    separator_is_valid
 from repro.core.graph import Graph
 from repro.core.initsep import initial_parts
 from repro.core.ordering import Ordering
 from repro.sparse.mindeg import min_degree
 from repro.util import mix_seeds
 
-Work = Union[BFSWork, FMWork]
+Work = Union[BFSWork, FMWork, MatchWork]
 
 
 @dataclasses.dataclass
@@ -74,7 +76,9 @@ def separator_task(g: Graph, seed: int, nproc: int, cfg: NDConfig
     """
     if g.n < 4:
         return None
-    state = coarsen_multilevel(
+    # matching works of the coarsening loop propagate to the driver too:
+    # the service batches them per ELL bucket across all live subproblems
+    state = yield from coarsen_multilevel_task(
         g, seed, nproc=nproc if cfg.fold_dup else 1,
         coarse_target=cfg.coarse_target, fold_threshold=cfg.fold_threshold,
         max_instances=cfg.k_fm_cap)
@@ -92,11 +96,8 @@ def separator_task(g: Graph, seed: int, nproc: int, cfg: NDConfig
         parts_init=parts0)
     assert separator_is_valid(nbr_c, part)
 
-    if cfg.refine_strict:
-        k_fm = 1
-    else:
-        k_fm = int(np.clip(nproc, 1, cfg.k_fm_cap)) if cfg.fold_dup else 1
-        k_fm = max(k_fm, 2)
+    k_fm = fm_lane_count(nproc, cfg.k_fm_cap, cfg.fold_dup,
+                         strict=cfg.refine_strict)
     pos_only = cfg.refine_strict
     n_pert = 0 if pos_only else 8
 
@@ -136,6 +137,8 @@ def execute_work(work: Work):
     """Synchronous single-work execution (the non-batched driver)."""
     if isinstance(work, FMWork):
         return execute_fm_works([work])[0]
+    if isinstance(work, MatchWork):
+        return execute_match_works([work])[0]
     return execute_bfs_works([work])[0]
 
 

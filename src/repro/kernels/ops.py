@@ -1,7 +1,11 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public jit'd wrappers around the device kernels (bucketed dispatch API).
 
-Handles padding to block multiples and backend selection: ``interpret=True``
-(Python execution of the kernel body) on CPU hosts, compiled Mosaic on TPU.
+Pallas wrappers handle padding to block multiples and backend selection:
+``interpret=True`` (Python execution of the kernel body) on CPU hosts,
+compiled Mosaic on TPU.  The batched entry points (``band_bfs_batch``,
+``sep_gain_batch``, ``match_batch``) are what the service's bucketed
+executors dispatch — one call per shape bucket, lanes mixing independent
+subproblems.
 """
 from __future__ import annotations
 
@@ -68,6 +72,20 @@ def band_bfs_batch(nbr, src, width: int, interpret: bool | None = None):
     return bfs_multi(jnp.asarray(nbr, jnp.int32),
                      jnp.asarray(src, jnp.int32), width,
                      interpret=interpret)
+
+
+def match_batch(nbr, wgt, keys, rounds: int = 8):
+    """Batched heavy-edge matching over a bucket of ELL graphs.
+
+    nbr/wgt (L, n, d) int32 (-1 / 0 pad), keys (L, 2) uint32 PRNG keys →
+    match (L, n) int32 (mate id, self for singletons).  One vmapped XLA
+    dispatch for the whole bucket; per-lane results equal the single-graph
+    ``matching.heavy_edge_matching`` with the same key.
+    """
+    from repro.core.matching import heavy_edge_matching_multi
+    return heavy_edge_matching_multi(jnp.asarray(nbr, jnp.int32),
+                                     jnp.asarray(wgt, jnp.int32),
+                                     jnp.asarray(keys), rounds=rounds)
 
 
 def sep_gain_batch(nbr, vwgt, part, block_rows: int = 256,

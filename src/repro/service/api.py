@@ -12,8 +12,15 @@ Usage (see examples/serve_orderings.py):
 a cache hit resolves immediately and duplicate *pending* fingerprints are
 coalesced so each unique problem is ordered once per drain.  ``drain``
 hands all unique pending requests to the breadth-first scheduler
-(``order_batch``), which executes separator work bucketed across the whole
-queue.
+(``order_batch``), which executes separator work — matching, band BFS and
+FM — bucketed across the whole queue.
+
+Contracts: graphs are ``core.graph.Graph`` (symmetric CSR, host numpy);
+results carry ``perm`` with perm[k] = vertex eliminated k-th, always a
+permutation of [0, n).  The pipeline is deterministic given (graph, seed,
+nproc, cfg) — equal fingerprints imply identical permutations, which is
+what makes the cache sound.  The service is single-process; one ``drain``
+call runs everything on the local device set.
 """
 from __future__ import annotations
 

@@ -2,17 +2,18 @@
 
 ``run_works`` takes the mixed list of device-work items that a wave of
 separator tasks is blocked on, splits it by kind, and hands each kind to
-its bucketed executor: ``execute_fm_works`` / ``execute_bfs_works`` group
-by padded ELL shape and run ONE vmapped dispatch per bucket.  Per-lane
-results are independent of batch composition, so driving N subproblems
-through here is result-identical to driving them one at a time — just with
-O(bucket) fewer dispatches.
+its bucketed executor: ``execute_fm_works`` / ``execute_bfs_works`` /
+``execute_match_works`` group by padded ELL shape and run ONE vmapped
+dispatch per bucket.  Per-lane results are independent of batch
+composition, so driving N subproblems through here is result-identical to
+driving them one at a time — just with O(bucket) fewer dispatches.
 """
 from __future__ import annotations
 
 from typing import Dict, List, Sequence
 
 from repro.core.band import BFSWork, execute_bfs_works
+from repro.core.coarsen import MatchWork, execute_match_works
 from repro.core.fm import FMWork, execute_fm_works
 
 
@@ -20,7 +21,9 @@ def run_works(works: Sequence[object]) -> List[object]:
     """Execute a heterogeneous batch of works; results in input order."""
     fm_idx = [i for i, w in enumerate(works) if isinstance(w, FMWork)]
     bfs_idx = [i for i, w in enumerate(works) if isinstance(w, BFSWork)]
-    assert len(fm_idx) + len(bfs_idx) == len(works), "unknown work kind"
+    mt_idx = [i for i, w in enumerate(works) if isinstance(w, MatchWork)]
+    assert len(fm_idx) + len(bfs_idx) + len(mt_idx) == len(works), \
+        "unknown work kind"
     out: Dict[int, object] = {}
     if fm_idx:
         for i, res in zip(fm_idx,
@@ -29,6 +32,10 @@ def run_works(works: Sequence[object]) -> List[object]:
     if bfs_idx:
         for i, res in zip(bfs_idx,
                           execute_bfs_works([works[i] for i in bfs_idx])):
+            out[i] = res
+    if mt_idx:
+        for i, res in zip(mt_idx,
+                          execute_match_works([works[i] for i in mt_idx])):
             out[i] = res
     return [out[i] for i in range(len(works))]
 

@@ -5,10 +5,15 @@ subproblem's kernels on its own.  The scheduler instead keeps a *frontier*
 of ND nodes across ALL submitted graphs and walks the trees level by
 level: every node at the current depth that needs a separator contributes
 its pipeline generator, and ``drive_tasks`` executes each wave of
-outstanding BFS/FM work as bucketed vmap batches.  The left/right
-subgraphs of every dissection are independent (paper §3.1) — exactly the
-parallelism the paper spreads over processes, here spread over the lanes
-of a batched kernel dispatch.
+outstanding matching / BFS / FM work as bucketed vmap batches (the
+coarsening loop's matchings batch exactly like the band stages — one
+``match_batch`` dispatch per ELL bucket per wave, with the host-side
+coarse builds grouped in between).  The left/right subgraphs of every
+dissection are independent (paper §3.1) — exactly the parallelism the
+paper spreads over processes, here spread over the lanes of a batched
+kernel dispatch.  ``distributed_nested_dissection`` funnels its deferred
+sequential subtrees through ``order_batch`` too, so the endgames of every
+ND branch share these waves.
 
 Work items run the same computation whether batched or not, and the tree
 bookkeeping mirrors ``core.nd._nd_rec`` exactly (same seeds, same fold
