@@ -209,6 +209,7 @@ def make_parts_mesh(nparts: int) -> Mesh:
 # gather instrumentation (the gather-free tests hang off this)
 # ------------------------------------------------------------------ #
 _GATHER_LOG: Optional[List[Tuple[str, int]]] = None
+_HALO_LOG: Optional[List[int]] = None
 
 
 @contextlib.contextmanager
@@ -233,6 +234,31 @@ def track_gathers():
 def _note_gather(kind: str, size: int) -> None:
     if _GATHER_LOG is not None:
         _GATHER_LOG.append((kind, int(size)))
+
+
+@contextlib.contextmanager
+def track_halos():
+    """Record every host-level halo exchange executed inside the block.
+
+    Yields a list that receives the exchanged element count (P · n_loc_max
+    words pushed through the collective) per call to a
+    ``halo_exchange_fn`` closure.  Exchanges fused *inside* jitted sweeps
+    (the per-step relaxations of ``distributed_bfs``, the matching
+    rounds) are not counted — this tracks the per-round synchronization
+    budget of host-driven loops, which is what the sharded-band
+    refinement tests bound.
+    """
+    global _HALO_LOG
+    prev, _HALO_LOG = _HALO_LOG, []
+    try:
+        yield _HALO_LOG
+    finally:
+        _HALO_LOG = prev
+
+
+def _note_halo(size: int) -> None:
+    if _HALO_LOG is not None:
+        _HALO_LOG.append(int(size))
 
 
 # ------------------------------------------------------------------ #
@@ -335,6 +361,75 @@ def reshard_vector(src_dg: DGraph, dst_dg: DGraph, xs: np.ndarray,
     """
     assert src_dg.n_global == dst_dg.n_global
     return pull_by_gid(src_dg, xs, shard_gids(dst_dg), fill=fill)
+
+
+# ------------------------------------------------------------------ #
+# boundary masks + deterministic coloring (alternating-color schedule)
+# ------------------------------------------------------------------ #
+def np_hash_mix(x: np.ndarray, *salts: int) -> np.ndarray:
+    """lowbias32 chain on int arrays (numpy mirror of matching.hash_mix).
+
+    Every shard evaluates the same pure function of global ids alone, so
+    symmetric rules (conflict-repair losers, boundary colors) need no
+    extra messages — the same argument as the matching protocol's coins.
+    """
+    def lb(v):
+        v = v ^ (v >> np.uint32(16))
+        v = v * np.uint32(0x7FEB352D)
+        v = v ^ (v >> np.uint32(15))
+        v = v * np.uint32(0x846CA68B)
+        return v ^ (v >> np.uint32(16))
+
+    h = np.full(np.shape(x), 0x9E3779B9, dtype=np.uint32)
+    for v in (x,) + salts:
+        v = np.asarray(v).astype(np.uint32)
+        h = lb(h ^ (v * np.uint32(0x85EBCA6B) + np.uint32(1)))
+    return h
+
+
+def boundary_mask(dg: DGraph) -> np.ndarray:
+    """(P, n_loc_max) bool: local vertices with ≥ 1 cross-shard edge.
+
+    A vertex is *boundary* when any ELL slot addresses the ghost ring
+    (compact index ≥ n_loc_max).  Interior vertices can never create a
+    cross-shard 0–1 edge, so refinement schedules only need to gate the
+    boundary set.
+    """
+    return (dg.nbr_gst >= dg.n_loc_max).any(axis=2) & valid_mask(dg)
+
+
+def color_by_gid(dg: DGraph, salt: int = 0, exchange: bool = True
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Deterministic two-coloring of vertices by gid hash (§3.3 schedule).
+
+    Returns ``(hash_ext, color_ext)``, both (P, n_loc_max + n_ghost_max):
+    the full uint32 hash (for tiebreaks on monochromatic edges) and the
+    color (hash & 1, int8; -1 on padding) for every local slot *and* its
+    ghost ring.  Local colors are computed from ``shard_gids``; ghost
+    colors are the same pure hash of ``ghost_gid``, so owner and
+    neighbor always agree with no messages.  With ``exchange`` the ghost
+    colors are additionally halo-exchanged from the owners and
+    cross-checked against the local recomputation — callers that
+    re-color every round (the alternating-color band schedule rotates
+    the salt to avoid starving tiebreak losers) validate the first
+    coloring this way and skip the exchange for the rest, keeping the
+    per-round exchange budget flat.
+    """
+    gid = shard_gids(dg)
+    h_loc = np_hash_mix(np.maximum(gid, 0), salt & 0x7FFFFFFF)
+    h_gst = np_hash_mix(np.maximum(dg.ghost_gid, 0), salt & 0x7FFFFFFF)
+    hash_ext = np.concatenate([h_loc, h_gst], axis=1)
+    col_loc = np.where(gid >= 0, (h_loc & 1).astype(np.int32), -1)
+    gok = dg.ghost_gid >= 0
+    if exchange:
+        col_ext = np.asarray(halo_exchange_fn(dg)(col_loc))
+        assert np.array_equal(np.where(gok, col_ext[:, dg.n_loc_max:], 0),
+                              np.where(gok, h_gst & 1, 0)), \
+            "halo-exchanged ghost colors disagree with the gid hash"
+    color_ext = np.concatenate(
+        [col_loc, np.where(gok, (h_gst & 1).astype(np.int32), -1)],
+        axis=1).astype(np.int8)
+    return hash_ext, color_ext
 
 
 # ------------------------------------------------------------------ #
@@ -533,6 +628,7 @@ def halo_exchange_fn(dg: DGraph):
 
     def halo(x):
         x = jnp.asarray(x)
+        _note_halo(dg.nparts * dg.n_loc_max)
         fn = _halo_jit(dg.nparts, dg.n_loc_max, dg.ghost_gid.shape[1],
                        str(x.dtype))
         return fn(x, gids, vtxdist)

@@ -23,9 +23,13 @@ thresholds, every structure the recursion touches stays distributed —
     k multi-sequential FM lanes exactly as before; large bands stay
     sharded: each shard refines its local fragment (ghost ring locked,
     boundary gains read through halo-exchanged parts and weights) in
-    synchronous rounds, with a deterministic hash rule repairing
-    boundary conflicts — all shard fragments of a round run as ONE
-    bucketed ``fm_refine_multi`` dispatch;
+    alternating-color phases — boundary vertices two-colored by gid
+    hash, at most one movable endpoint per cross-shard edge per phase,
+    ghost pulls pushed to owners — so the phases are conflict-free by
+    construction (asserted; the deterministic symmetric-hash repair
+    survives as the legacy schedule's fallback), and all shard
+    fragments of a phase run as ONE bucketed ``fm_refine_multi``
+    dispatch;
   * **distributed ordering tree** (§2.2) — ``DistOrdering`` records, per
     ND node, its column-block range in the inverse permutation and, per
     shard, the locally-held ordering fragments.  Fragment offsets come
@@ -47,18 +51,20 @@ the pipeline; §4.1 maps the paper's ordering-tree concepts onto
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.band import band_graph_with_anchors
-from repro.core.dgraph import (DGraph, dgraph_coarsen, dgraph_fold,
+from repro.core.dgraph import (DGraph, boundary_mask, color_by_gid,
+                               dgraph_coarsen, dgraph_fold,
                                dgraph_induced, distributed_bfs,
                                distributed_matching, halo_exchange_fn,
-                               pull_by_gid, reshard_vector, scatter_by_gid,
-                               shard_gids, shard_vector, to_host,
-                               unshard_vector, valid_mask)
+                               np_hash_mix, pull_by_gid, reshard_vector,
+                               scatter_by_gid, shard_gids, shard_vector,
+                               to_host, unshard_vector, valid_mask)
 from repro.core.fm import (FMWork, execute_fm_works, fm_lane_count,
                            refine_parts, separator_is_valid)
 from repro.core.graph import Graph
@@ -78,6 +84,14 @@ class DNDConfig(NDConfig):
     for multi-sequential FM; larger bands are refined sharded.
     ``band_sync_rounds`` / ``band_shard_lanes``: synchronous halo-sync
     rounds and FM lanes per shard of the sharded band refinement.
+    ``band_alt_colors``: schedule sharded-band boundary moves by an
+    alternating gid-hash two-coloring — each sync round becomes two
+    color phases in which every cross-shard edge has at most one movable
+    endpoint, so boundary vertices refine without conflicts (the
+    lock-all-boundary legacy schedule is the False setting).
+    ``band_check_conflicts``: assert the alternating schedule really
+    produced zero cross-shard 0–1 conflicts (the repair rule stays as a
+    guarded fallback either way).
     """
     centralize_threshold: int = 256     # below: gather + defer to scheduler
     match_rounds: int = 8               # distributed matching rounds
@@ -85,6 +99,8 @@ class DNDConfig(NDConfig):
     band_central_threshold: int = 2048  # bands ≤ this centralize (§3.3)
     band_sync_rounds: int = 2           # sharded-band halo-sync rounds
     band_shard_lanes: int = 4           # FM lanes per shard (sharded band)
+    band_alt_colors: bool = True        # alternating-color boundary moves
+    band_check_conflicts: bool = True   # assert zero conflicts under alt
 
 
 # ------------------------------------------------------------------ #
@@ -255,25 +271,67 @@ def _eval_part_sh(dg: DGraph, part_sh: np.ndarray, eps_frac: float
     return score, ws, imb
 
 
-def _np_hash(x: np.ndarray, *salts: int) -> np.ndarray:
-    """lowbias32 chain on int arrays (numpy mirror of matching.hash_mix).
+def conflict_loser(vg: np.ndarray, ug: np.ndarray, rnd: int,
+                   seed: int) -> np.ndarray:
+    """Symmetric loser rule for a conflicted cross-shard 0–1 edge.
 
-    Both endpoints' owners evaluate the same symmetric conflict-repair
-    rule from global ids alone — no extra messages, like the matching
-    protocol's coins.
+    ``True`` where the first endpoint (``vg``) loses and returns to the
+    separator.  Both endpoints' owners evaluate the same rule from the
+    two global ids alone — no extra messages, like the matching
+    protocol's coins — and the rule is *antisymmetric* for distinct
+    gids (swapping the arguments flips the result, gid tiebreak on hash
+    collisions), so the two shard perspectives always agree on the one
+    loser.  Under the alternating-color schedule this is only a guarded
+    fallback: the schedule itself admits no conflicts.
     """
-    def lb(v):
-        v = v ^ (v >> np.uint32(16))
-        v = v * np.uint32(0x7FEB352D)
-        v = v ^ (v >> np.uint32(15))
-        v = v * np.uint32(0x846CA68B)
-        return v ^ (v >> np.uint32(16))
+    hv = np_hash_mix(vg, rnd, seed & 0x7FFFFFFF)
+    hu = np_hash_mix(ug, rnd, seed & 0x7FFFFFFF)
+    return (hv < hu) | ((hv == hu) & (vg < ug))
 
-    h = np.full(np.shape(x), 0x9E3779B9, dtype=np.uint32)
-    for v in (x,) + salts:
-        v = np.asarray(v).astype(np.uint32)
-        h = lb(h ^ (v * np.uint32(0x85EBCA6B) + np.uint32(1)))
-    return h
+
+# ------------------------------------------------------------------ #
+# band-refinement instrumentation (bench + schedule-invariant tests)
+# ------------------------------------------------------------------ #
+_BAND_LOG: Optional[List[dict]] = None
+
+
+@contextlib.contextmanager
+def track_band_stats():
+    """Record one stats dict per sharded-band refinement in the block.
+
+    Each ``_sharded_band_fm`` call appends ``{"schedule", "n", "nparts",
+    "phases", "conflicts" (directed conflict-arc count per phase),
+    "repairs" (vertices kicked back to the separator per phase), "pulls"
+    (ghost pulls pushed to owners per phase), "anchor_min" (smallest
+    rest-of-graph anchor weight seen), "halos" (host-level halo
+    exchanges executed)}``.  The bench reports these; the gather-free
+    tests assert zero conflicts under the alternating schedule and that
+    the per-round halo budget does not grow versus the locked-ghost
+    baseline.
+    """
+    global _BAND_LOG
+    prev, _BAND_LOG = _BAND_LOG, []
+    try:
+        yield _BAND_LOG
+    finally:
+        _BAND_LOG = prev
+
+
+def _cross_conflicts(bpart: np.ndarray, part_ext: np.ndarray,
+                     pb: np.ndarray, lib: np.ndarray, cb: np.ndarray
+                     ) -> np.ndarray:
+    """Mask of conflicted cross-shard arcs under the exchanged view.
+
+    ``(pb, lib, cb)`` is the refinement's cached cross-shard arc index
+    (local endpoint, ghost compact index ≥ n_loc_max); the mask marks
+    arcs whose ghost neighbor sits on the opposite 0/1 side.  Every
+    conflicted edge shows up once per incident shard, so both owners
+    see it and the antisymmetric loser rule picks the same vertex from
+    either perspective.
+    """
+    lp = bpart[pb, lib].astype(np.int32)
+    gp_ = part_ext[pb, cb]
+    return ((lp == 0) & (gp_ == 1)) | ((lp == 1) & (gp_ == 0))
 
 
 # ------------------------------------------------------------------ #
@@ -319,18 +377,37 @@ def _centralize_band(dg: DGraph, part_sh: np.ndarray, dist_sh: np.ndarray,
 def _sharded_band_fm(dg: DGraph, part_sh: np.ndarray, keep_sh: np.ndarray,
                      dist_sh: np.ndarray, seed: int,
                      cfg: DNDConfig) -> np.ndarray:
-    """Shard-local band FM with halo-exchanged boundary state (§3.3).
+    """Shard-local band FM with alternating-color boundary moves (§3.3).
 
     The band stays sharded: each shard refines the fragment it owns,
     with its ghost ring present but *locked* (remote-owned vertices
     cannot be moved locally) and per-side anchors carrying the rest of
-    the graph's weight, so boundary gains and global balance are exact
-    up to the neighbors' concurrent moves.  ``band_sync_rounds``
-    synchronous rounds: all shard fragments execute as one bucketed
-    ``fm_refine_multi`` dispatch, owners' parts are halo-refreshed, and
-    any 0–1 edge created by concurrent boundary moves is repaired by a
-    deterministic symmetric hash rule (the losing endpoint returns to
-    the separator — validity is restored without extra messages).
+    the graph's weight, so boundary gains and global balance are exact.
+
+    **Schedule** (``band_alt_colors``, default): boundary vertices are
+    two-colored by a gid hash and each sync round runs as two *color
+    phases* — phase ``ph`` unlocks local boundary vertices of color
+    ``ph % 2`` while the opposite color (and, as always, every ghost
+    copy) stays locked; of a *monochromatic* cross-shard pair only the
+    (hash, gid)-larger endpoint is ever unlocked.  Every cross-shard
+    edge therefore has at most one movable endpoint per phase.  When a
+    movable vertex drags a locked ghost into the separator, the pull is
+    *pushed to the owner* (an owner-routed O(pulled) message — pushes
+    only ever move vertices to the separator, so concurrent pushes
+    cannot disagree), which makes the fragment-local FM accounting
+    globally exact and leaves the phase with **zero** cross-shard 0–1
+    conflicts — checked as an invariant each phase.  All shard
+    fragments of a phase execute as ONE bucketed ``fm_refine_multi``
+    dispatch, and one halo exchange per phase both verifies the
+    invariant and feeds the next phase — the same per-round exchange
+    budget as the legacy schedule.
+
+    The legacy schedule (``band_alt_colors=False``) keeps every local
+    vertex movable every round and repairs concurrent-move conflicts
+    after the fact with the symmetric hash rule (``conflict_loser``,
+    the losing endpoint returns to the separator); under the
+    alternating schedule that repair survives only as a guarded
+    fallback behind the zero-conflict assertion.
     """
     width = cfg.band_width
     band_dg, (bpart_sh, bdist_sh, bgid_sh) = dgraph_induced(
@@ -340,34 +417,88 @@ def _sharded_band_fm(dg: DGraph, part_sh: np.ndarray, keep_sh: np.ndarray,
     nlm = band_dg.n_loc_max
     halo = halo_exchange_fn(band_dg)
     vwgt_ext = np.asarray(halo(band_dg.vwgt.astype(np.int32)))
-    band_gid = shard_gids(band_dg)      # band-graph ids (conflict hashing)
+    band_gid = shard_gids(band_dg)      # band-graph ids (colors, repair)
+    vb = valid_mask(band_dg)
 
     # out-of-band side weights never change during band refinement; the
-    # in-band side weights do, so global totals recompute every round
+    # in-band side weights do, so global totals recompute every phase
     v_full = valid_mask(dg)
     out_full = v_full & ~np.asarray(keep_sh, bool)
     w_out = [int(dg.vwgt[out_full & (part_sh == s)].sum()) for s in (0, 1)]
-    vb = valid_mask(band_dg)
     bpart = np.asarray(bpart_sh, np.int8).copy()
     bdist = np.asarray(bdist_sh)
 
-    for r in range(cfg.band_sync_rounds):
+    # cross-shard arc index (fixed for the whole refinement): shared by
+    # the per-round yield rule, the conflict check and the repair rule
+    pb, lib, slb = np.nonzero(band_dg.nbr_gst >= nlm)
+    cb = band_dg.nbr_gst[pb, lib, slb].astype(np.int64)
+    vg_b = band_gid[pb, lib]
+    ug_b = band_dg.ghost_gid[pb, cb - nlm]
+
+    alt = cfg.band_alt_colors and P > 1
+    if alt:
+        bmask = boundary_mask(band_dg)
+
+    def round_coloring(r: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Round r's coloring + yield set (salt rotates per round).
+
+        A fixed coloring would freeze the same tiebreak losers for the
+        whole refinement (dense boundaries starve); rotating the hash
+        salt per sync round unlocks a different subset each round while
+        the per-phase at-most-one-movable-endpoint invariant still holds
+        (the coloring is constant within a round).  Only round 0's ghost
+        colors are halo-validated — later colorings are the same pure
+        gid hash, recomputable locally.
+        """
+        hash_ext, color_ext = color_by_gid(band_dg, mix_seeds(seed, 29, r),
+                                           exchange=(r == 0))
+        # monochromatic cross-shard pairs: the (hash, gid)-smaller
+        # endpoint yields to its neighbor this round, so those edges
+        # too have at most one movable endpoint in their color's phase
+        hv_b, hu_b = hash_ext[pb, lib], hash_ext[pb, cb]
+        mono = color_ext[pb, lib] == color_ext[pb, cb]
+        u_wins = mono & ((hu_b > hv_b) | ((hu_b == hv_b) & (ug_b > vg_b)))
+        yields = np.zeros((P, nlm), bool)
+        yields[pb[u_wins], lib[u_wins]] = True
+        return color_ext[:, :nlm], yields
+
+    n_phases = (2 if alt else 1) * cfg.band_sync_rounds
+
+    stats = {"schedule": "alt" if alt else "locked", "n": band_dg.n_global,
+             "nparts": P, "phases": n_phases, "conflicts": [],
+             "repairs": [], "pulls": [], "anchor_min": None,
+             "halos": 2 + (1 if alt else 0)}    # vwgt + initial + colors
+
+    # phase-invariant fragment structure, built once per shard: only the
+    # anchor edges and the part/weight views change between phases
+    frag_base: List[Optional[Tuple]] = []
+    for p in range(P):
+        n_p = int(band_dg.n_loc[p])
+        if n_p == 0:
+            frag_base.append(None)
+            continue
+        G_p = int(band_dg.n_ghost[p])
+        rows = band_dg.nbr_gst[p, :n_p]
+        li, sl = np.nonzero(rows >= 0)
+        c = rows[li, sl].astype(np.int64)
+        tgt = np.where(c < nlm, c, n_p + (c - nlm))
+        frag_base.append((n_p, G_p, np.stack([li, tgt], 1),
+                          bdist[p, :n_p], band_dg.vwgt[p, :n_p],
+                          vwgt_ext[p, nlm:nlm + G_p]))
+
+    part_ext = np.asarray(halo(bpart.astype(np.int32)))
+    for ph in range(n_phases):
+        if alt and ph % 2 == 0:
+            color, yield_to_nbr = round_coloring(ph // 2)
         w_glob = [w_out[s] + int(band_dg.vwgt[vb & (bpart == s)].sum())
                   for s in (0, 1)]
-        part_ext = np.asarray(halo(bpart.astype(np.int32)))
         works: List[FMWork] = []
-        shards: List[int] = []
+        shards: List[Tuple[int, np.ndarray]] = []
         for p in range(P):
-            n_p = int(band_dg.n_loc[p])
-            if n_p == 0:
+            if frag_base[p] is None:
                 continue
-            G_p = int(band_dg.n_ghost[p])
-            rows = band_dg.nbr_gst[p, :n_p]
-            li, sl = np.nonzero(rows >= 0)
-            c = rows[li, sl].astype(np.int64)
-            tgt = np.where(c < nlm, c, n_p + (c - nlm))
-            edges = np.stack([li, tgt], 1)
-            ldist = bdist[p, :n_p]
+            n_p, G_p, edges0, ldist, lw, gw = frag_base[p]
+            edges = edges0
             lpart = bpart[p, :n_p]
             gpart = part_ext[p, nlm:nlm + G_p]
             a0, a1 = n_p + G_p, n_p + G_p + 1
@@ -376,50 +507,95 @@ def _sharded_band_fm(dg: DGraph, part_sh: np.ndarray, keep_sh: np.ndarray,
                 if len(ll):
                     edges = np.concatenate(
                         [edges, np.stack([np.full(len(ll), a), ll], 1)])
-            frag = Graph.from_edges(n_p + G_p + 2, edges)
-            lw = band_dg.vwgt[p, :n_p]
-            gw = vwgt_ext[p, nlm:nlm + G_p]
             frag_w = [int(lw[lpart == s].sum()) + int(gw[gpart == s].sum())
                       for s in (0, 1)]
-            vwgt_f = np.concatenate(
-                [lw, gw, [max(0, w_glob[0] - frag_w[0]),
-                          max(0, w_glob[1] - frag_w[1])]])
-            part_f = np.concatenate([lpart, gpart, [0, 1]]).astype(np.int8)
+            # rest-of-graph anchors: the residual of the freshly
+            # recomputed global side totals over the fragment's share.
+            # The totals are recomputed from the live part vector every
+            # phase (repair kicks and ghost-pull pushes included), so a
+            # negative residual can only mean broken round-weight
+            # accounting — assert instead of clamping the drift away.
+            anchor_w = [w_glob[s] - frag_w[s] for s in (0, 1)]
+            assert min(anchor_w) >= 0, (
+                f"band round-weight drift: shard {p} phase {ph} holds "
+                f"side weights {frag_w} exceeding globals {w_glob}")
+            stats["anchor_min"] = (min(anchor_w)
+                                   if stats["anchor_min"] is None
+                                   else min(stats["anchor_min"],
+                                            *anchor_w))
             locked = np.zeros(n_p + G_p + 2, bool)
             locked[n_p:] = True                 # ghosts + anchors
+            if alt:
+                locked[:n_p] = bmask[p, :n_p] & (
+                    (color[p, :n_p] != ph % 2) | yield_to_nbr[p, :n_p])
+            if not np.any((lpart == 2) & ~locked[:n_p]):
+                continue        # no movable separator vertex: FM no-ops
+            frag = Graph.from_edges(n_p + G_p + 2, edges)
+            vwgt_f = np.concatenate([lw, gw, anchor_w])
+            part_f = np.concatenate([lpart, gpart, [0, 1]]).astype(np.int8)
             nbr_f, _ = frag.to_ell()
             works.append(FMWork(
                 nbr=nbr_f, vwgt=vwgt_f, part=part_f, locked=locked,
-                seed=mix_seeds(seed, 41, r, p),
+                seed=mix_seeds(seed, 41, ph, p),
                 k_inst=cfg.band_shard_lanes, eps_frac=cfg.eps_frac,
                 passes=cfg.fm_passes, n_pert=8))
-            shards.append(p)
+            shards.append((p, gpart))
         if not works:
-            break
-        for p, (pf, _, _) in zip(shards, execute_fm_works(works)):
+            if not alt:
+                break           # nothing can ever move again
+            stats["conflicts"].append(0)
+            stats["repairs"].append(0)
+            stats["pulls"].append(0)
+            continue            # the other color phase may still refine
+        pull_gids: List[np.ndarray] = []
+        for (p, gpart_in), (pf, _, _) in zip(shards,
+                                             execute_fm_works(works)):
             n_p = int(band_dg.n_loc[p])
+            G_p = int(band_dg.n_ghost[p])
             bpart[p, :n_p] = pf[:n_p]
+            if alt:
+                # ghost pulls: local moves dragged these locked remote
+                # vertices into the separator; push the pulls to the
+                # owners so the fragment accounting is globally real
+                pulled = (pf[n_p:n_p + G_p] == 2) & (gpart_in <= 1)
+                if pulled.any():
+                    pull_gids.append(band_dg.ghost_gid[p, :G_p][pulled])
+        n_pulls = 0
+        if pull_gids:
+            pg_all = np.concatenate(pull_gids)
+            n_pulls = len(pg_all)
+            bpart = scatter_by_gid(band_dg, bpart, pg_all,
+                                   np.full(n_pulls, 2, np.int8))
+        stats["pulls"].append(n_pulls)
 
-        # conflict repair: concurrent boundary moves may have created a
-        # 0–1 edge across shards; the endpoint losing the symmetric hash
-        # rule returns to the separator (both owners compute the same
-        # winner from the two gids alone)
+        # one halo exchange per phase: provides this phase's cross-shard
+        # view for the conflict check AND the ghost parts of the next
+        # phase — the per-round exchange budget of the legacy schedule
         part_ext = np.asarray(halo(bpart.astype(np.int32)))
-        p_all, li_all, sl_all = np.nonzero(band_dg.nbr_gst >= 0)
-        c_all = band_dg.nbr_gst[p_all, li_all, sl_all].astype(np.int64)
-        gh = c_all >= nlm
-        pg, lig, cg = p_all[gh], li_all[gh], c_all[gh]
-        lp = bpart[pg, lig].astype(np.int32)
-        gp_ = part_ext[pg, cg]
-        conflict = ((lp == 0) & (gp_ == 1)) | ((lp == 1) & (gp_ == 0))
-        if conflict.any():
-            pc, lic, cc = pg[conflict], lig[conflict], cg[conflict]
-            vg = band_gid[pc, lic]
-            ug = band_dg.ghost_gid[pc, cc - nlm]
-            hv = _np_hash(vg, r, seed & 0x7FFFFFFF)
-            hu = _np_hash(ug, r, seed & 0x7FFFFFFF)
-            lose_local = (hv < hu) | ((hv == hu) & (vg < ug))
-            bpart[pc[lose_local], lic[lose_local]] = 2
+        stats["halos"] += 1
+        cmask = _cross_conflicts(bpart, part_ext, pb, lib, cb)
+        n_conf = int(cmask.sum())
+        stats["conflicts"].append(n_conf)
+        n_rep = 0
+        if n_conf:
+            assert not (alt and cfg.band_check_conflicts), (
+                f"alternating-color schedule produced {n_conf} "
+                f"cross-shard 0-1 conflict arcs in phase {ph}: the "
+                "at-most-one-movable-endpoint invariant is broken")
+            # guarded fallback (the legacy schedule's repair): the
+            # endpoint losing the symmetric hash rule returns to the
+            # separator — both owners compute the same loser from the
+            # two gids alone, so validity is restored without messages
+            lose_local = conflict_loser(vg_b[cmask], ug_b[cmask], ph, seed)
+            pk, lk = pb[cmask][lose_local], lib[cmask][lose_local]
+            # a vertex losing on several arcs is kicked once
+            n_rep = len(np.unique(pk.astype(np.int64) * nlm + lk))
+            bpart[pk, lk] = 2
+            part_ext = np.asarray(halo(bpart.astype(np.int32)))
+            stats["halos"] += 1
+        stats["repairs"].append(n_rep)
+    if _BAND_LOG is not None:
+        _BAND_LOG.append(stats)
 
     # project back: each shard writes its refined local band parts to the
     # owners of the original vertices (carried in the bgid payload)

@@ -234,6 +234,16 @@ class FMWork:
     directly; ``execute_fm_works`` pads each to its power-of-two ELL bucket
     and runs every work sharing a bucket in a single ``fm_refine_multi``
     dispatch (one lane per FM instance).
+
+    ``locked`` is *lane data*, not part of ``bucket_key``: works whose
+    locked masks differ (e.g. the per-phase boundary-color masks of the
+    sharded-band alternating schedule, ``dnd._sharded_band_fm``) still
+    batch into one dispatch, because every lane's mask rides in as an
+    input array of the vmapped body — only shape-affecting fields
+    (padded n / d, the max_moves sub-bucket, passes, pos_only) key the
+    bucket.  A locked vertex cannot be *selected* for a move, but a
+    move may still *pull* it into the separator; schedulers that lock
+    remote-owned copies must propagate such pulls themselves.
     """
     nbr: np.ndarray                     # (n, d) int32 ELL ids, -1 pad
     vwgt: np.ndarray                    # (n,) vertex weights

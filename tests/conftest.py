@@ -1,19 +1,55 @@
 """Test-suite bootstrap.
 
-The property tests use ``hypothesis`` when it is installed; on machines
-without it (the CI/base image only ships jax + pytest) a minimal
-deterministic shim is registered in ``sys.modules`` *before* test modules
-import it.  The shim replays a fixed pseudo-random sample of each strategy
-(``max_examples`` draws, seeded per test name) so the property tests still
-exercise many input shapes, just without shrinking.
+Two jobs:
+
+* a ``slow`` marker for the full-size dnd / gather-free cases (multiple
+  minutes of CPU ``shard_map`` subprocess each).  They are skipped by
+  default so the local tier-1 run stays fast — reduced-size unmarked
+  variants cover the same code paths — and run with ``--runslow`` (or
+  ``REPRO_RUN_SLOW=1``) in the CI ``spmd`` job, which keeps the
+  full-size assertions on every PR.
+* the property tests use ``hypothesis`` when it is installed; on
+  machines without it (the CI/base image only ships jax + pytest) a
+  minimal deterministic shim is registered in ``sys.modules`` *before*
+  test modules import it.  The shim replays a fixed pseudo-random sample
+  of each strategy (``max_examples`` draws, seeded per test name) so the
+  property tests still exercise many input shapes, just without
+  shrinking.
 """
 from __future__ import annotations
 
 import functools
 import inspect
+import os
 import sys
 import types
 import zlib
+
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="run slow-marked full-size dnd/gather-free tests")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: full-size dnd/gather-free case (skipped by default; the CI "
+        "spmd job runs them with --runslow)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if (config.getoption("--runslow")
+            or os.environ.get("REPRO_RUN_SLOW") == "1"):
+        return
+    skip = pytest.mark.skip(
+        reason="full-size case: needs --runslow (CI spmd job runs these)")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
 
 
 def _install_hypothesis_shim() -> None:

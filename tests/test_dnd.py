@@ -1,10 +1,17 @@
 """Distributed nested dissection vs the host driver: permutation validity
-and quality parity, run in a subprocess with 8 host devices."""
+and quality parity, run in a subprocess with 8 host devices.
+
+The grid case (plus the fixed-seed determinism check) runs by default;
+the heavier rgg case is ``slow``-marked and runs in the CI ``spmd`` job
+(``--runslow``).
+"""
 import json
 import os
 import subprocess
 import sys
 import textwrap
+
+import pytest
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -17,39 +24,54 @@ SCRIPT = textwrap.dedent("""
     from repro.graphs import generators as G
     from repro.sparse.symbolic import nnz_opc
 
-    out = {}
+    out = {{}}
     cfg = DNDConfig(centralize_threshold=200)
-    for name, g in [("grid2d", G.grid2d(18, 18)),
-                    ("rgg2d", G.rgg2d(420, seed=2))]:
+    for name, g in [{graphs}]:
         dg = distribute(g, 8)
         perm_d = distributed_nested_dissection(dg, seed=0, cfg=cfg)
         perm_h = nested_dissection(g, seed=0, nproc=8)
         ok_perm = bool(np.array_equal(np.sort(perm_d), np.arange(g.n)))
         ratio = nnz_opc(g, perm_d)[1] / nnz_opc(g, perm_h)[1]
-        out[name] = {"perm": ok_perm, "ratio": round(float(ratio), 4)}
-    # determinism: same dg + seed => identical ordering
-    g = G.grid2d(18, 18)
-    dg = distribute(g, 8)
-    p1 = distributed_nested_dissection(dg, seed=3, cfg=cfg)
-    p2 = distributed_nested_dissection(dg, seed=3, cfg=cfg)
-    out["deterministic"] = bool(np.array_equal(p1, p2))
+        out[name] = {{"perm": ok_perm, "ratio": round(float(ratio), 4)}}
+    if {determinism}:
+        # determinism: same dg + seed => identical ordering
+        g = G.grid2d(18, 18)
+        dg = distribute(g, 8)
+        p1 = distributed_nested_dissection(dg, seed=3, cfg=cfg)
+        p2 = distributed_nested_dissection(dg, seed=3, cfg=cfg)
+        out["deterministic"] = bool(np.array_equal(p1, p2))
     print(json.dumps(out))
 """)
 
 
-def test_dnd_vs_host_parity():
-    res = subprocess.run([sys.executable, "-c", SCRIPT],
+def _run(graphs: str, determinism: bool) -> dict:
+    script = SCRIPT.format(graphs=graphs, determinism=determinism)
+    res = subprocess.run([sys.executable, "-c", script],
                          capture_output=True, text=True, timeout=560,
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
                               "HOME": "/root",
                               "JAX_PLATFORMS": os.environ.get(
                                   "JAX_PLATFORMS", "cpu")})
     assert res.returncode == 0, res.stderr[-2000:]
-    out = json.loads(res.stdout.strip().splitlines()[-1])
-    assert out["deterministic"], "dnd not deterministic for fixed seed"
-    for name in ("grid2d", "rgg2d"):
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def _check_parity(out, names):
+    for name in names:
         assert out[name]["perm"], f"{name}: not a permutation"
-        # per-graph guard is loose (single-seed noise); the tracked 5%
+        # per-graph guard is loose (single-seed noise); the tracked 3%
         # mean-OPC-parity bound lives in benchmarks/dnd_bench.py
         assert out[name]["ratio"] < 1.25, \
             f"{name}: OPC ratio {out[name]['ratio']} vs host"
+
+
+def test_dnd_vs_host_parity():
+    out = _run('("grid2d", G.grid2d(18, 18))', determinism=True)
+    assert out["deterministic"], "dnd not deterministic for fixed seed"
+    _check_parity(out, ["grid2d"])
+
+
+@pytest.mark.slow
+def test_dnd_vs_host_parity_rgg():
+    out = _run('("rgg2d", G.rgg2d(420, seed=2))', determinism=False)
+    _check_parity(out, ["rgg2d"])

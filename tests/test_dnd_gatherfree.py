@@ -101,6 +101,116 @@ def test_track_gathers_records_sizes():
 
 
 # ------------------------------------------------------------------ #
+# alternating-color schedule building blocks (host side, no mesh)
+# ------------------------------------------------------------------ #
+def test_boundary_mask_matches_ownership_oracle():
+    from repro.core.dgraph import _raster_flat, boundary_mask, distribute
+    g = _mk()
+    for P in (3, 4):
+        dg = distribute(g, P)
+        owner = np.searchsorted(dg.vtxdist, np.arange(g.n),
+                                side="right") - 1
+        src = np.repeat(np.arange(g.n), g.degrees())
+        cross = owner[src] != owner[g.adjncy]
+        is_b = np.zeros(g.n, bool)
+        is_b[src[cross]] = True
+        assert np.array_equal(_raster_flat(dg, boundary_mask(dg)), is_b)
+
+
+def test_color_by_gid_pure_and_consistent_across_shards():
+    from repro.core.dgraph import color_by_gid, distribute, np_hash_mix
+    g = _mk()
+    dg = distribute(g, 4)
+    nlm = dg.n_loc_max
+    h, c = color_by_gid(dg, salt=3, exchange=False)
+    # local colors are the gid hash parity; padding is -1
+    for p in range(dg.nparts):
+        lo, hi = dg.vtxdist[p], dg.vtxdist[p + 1]
+        gid = np.arange(lo, hi)
+        exp = (np_hash_mix(gid, 3) & 1).astype(np.int8)
+        assert np.array_equal(c[p, :hi - lo], exp)
+        assert np.all(c[p, hi - lo:nlm] == -1)
+    # every ghost copy carries exactly its owner's color (pure gid hash:
+    # no messages needed — the same argument as the matching coins)
+    flat_c = np.full(g.n, -1, np.int8)
+    for p in range(dg.nparts):
+        lo, hi = dg.vtxdist[p], dg.vtxdist[p + 1]
+        flat_c[lo:hi] = c[p, :hi - lo]
+    for p in range(dg.nparts):
+        for k, gid in enumerate(dg.ghost_gid[p]):
+            if gid >= 0:
+                assert c[p, nlm + k] == flat_c[gid]
+    # rotating the salt really re-colors (the schedule's starvation fix)
+    h2, c2 = color_by_gid(dg, salt=4, exchange=False)
+    assert not np.array_equal(c, c2)
+
+
+def test_conflict_loser_symmetric_rule():
+    """Both owners of a conflicted cross-shard edge pick the same loser.
+
+    The repair rule is evaluated independently by the two shards from
+    the two gids alone, so it must be antisymmetric (exactly one of the
+    two perspectives says "my endpoint loses") and deterministic in
+    (round, seed).  Under the alternating-color schedule this is the
+    guarded fallback path.
+    """
+    from repro.core.dgraph import np_hash_mix
+    from repro.core.dnd import conflict_loser
+    rng = np.random.default_rng(7)
+    vg = rng.integers(0, 10 ** 6, 4096)
+    ug = rng.integers(0, 10 ** 6, 4096)
+    keep = vg != ug
+    vg, ug = vg[keep], ug[keep]
+    for rnd in (0, 1, 3):
+        for seed in (0, 5, 1 << 40):
+            mine = conflict_loser(vg, ug, rnd, seed)
+            theirs = conflict_loser(ug, vg, rnd, seed)
+            assert np.array_equal(mine, conflict_loser(vg, ug, rnd, seed))
+            assert np.all(mine ^ theirs), \
+                "shard perspectives disagree on the loser"
+    # the lowbias32 chain is bijective for a fixed salt, so distinct
+    # uint32 gids never collide and the (hv == hu) tie-break can only
+    # fire through uint32 aliasing of int64 gids — exercise it directly:
+    # aliased gids hash equal and the gid comparison decides, again
+    # identically from both perspectives
+    x = np.arange(200_000, dtype=np.int64)
+    assert len(np.unique(np_hash_mix(x, 1, 5))) == len(x)
+    a = np.array([5], dtype=np.int64)
+    b = np.array([5 + (1 << 32)], dtype=np.int64)
+    assert np_hash_mix(a, 1, 5)[0] == np_hash_mix(b, 1, 5)[0]
+    assert bool(conflict_loser(a, b, 1, 5)[0])       # gid-smaller loses
+    assert not bool(conflict_loser(b, a, 1, 5)[0])   # ... from both sides
+
+
+def test_fm_bucket_mixes_distinct_locked_masks():
+    """Per-phase locked masks are lane data: works whose masks differ
+    still share one bucketed dispatch, bit-equal to singleton runs."""
+    from repro.core.fm import FMWork, execute_fm_works
+    from repro.graphs import generators as G
+    rng = np.random.default_rng(3)
+    works = []
+    for i, g in enumerate([G.grid2d(8, 8), G.grid2d(8, 8),
+                           G.grid2d(8, 8)]):
+        col = np.arange(g.n) % 8
+        part = np.where(col < 3, 0,
+                        np.where(col > 3, 1, 2)).astype(np.int8)
+        locked = rng.random(g.n) < (0.3 * i)    # distinct masks per work
+        nbr, _ = g.to_ell()
+        works.append(FMWork(nbr=nbr, vwgt=g.vwgt, part=part,
+                            locked=locked, seed=11 + i, k_inst=2))
+    singles = [execute_fm_works([w])[0] for w in works]
+    batched = execute_fm_works(works)
+    for (ps, ws, _), (pb, wb, _) in zip(singles, batched):
+        assert np.array_equal(ps, pb) and ws == wb, \
+            "bucketed result depends on lane composition"
+    # locked vertices were never *moved* out of the separator (they may
+    # be pulled in), so a locked separator vertex stays a separator
+    for w, (pf, _, _) in zip(works, batched):
+        started_sep = (w.part == 2) & w.locked
+        assert np.all(pf[started_sep] == 2)
+
+
+# ------------------------------------------------------------------ #
 # distributed ordering tree (paper §2.2)
 # ------------------------------------------------------------------ #
 def test_dist_ordering_fragments_and_sharded_assembly():
@@ -158,27 +268,32 @@ def test_execute_match_works_composition_independent():
 # ------------------------------------------------------------------ #
 # subprocess (8 virtual host devices): the gather-free guarantees
 # ------------------------------------------------------------------ #
-SCRIPT = textwrap.dedent("""
+def _run_script(script: str, timeout: int = 560) -> dict:
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=timeout,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": os.environ.get("HOME", "/root"),
+                              "JAX_PLATFORMS": os.environ.get(
+                                  "JAX_PLATFORMS", "cpu")})
+    assert res.returncode == 0, res.stderr[-2000:]
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+ND_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import numpy as np
-    from repro.core.dgraph import (_raster_flat, distribute, distributed_bfs,
-                                   shard_vector, track_gathers, valid_mask)
-    from repro.core.dnd import (DNDConfig, _band_refine_level_sh,
-                                distributed_nested_dissection)
-    from repro.core.band import extract_band, project_band
-    from repro.core.fm import fm_lane_count, refine_parts
+    from repro.core.dgraph import distribute, track_gathers
+    from repro.core.dnd import (DNDConfig, distributed_nested_dissection,
+                                track_band_stats)
     from repro.graphs import generators as G
-    from repro.util import mix_seeds
 
-    out = {}
-
-    # --- 1. no centralization above the thresholds (tentpole claim) ---
-    g = G.grid2d(40, 40)
+    out = {{}}
+    g = G.grid2d({side}, {side})
     dg = distribute(g, 8)
     cfg = DNDConfig(centralize_threshold=256, band_central_threshold=128)
-    with track_gathers() as log:
+    with track_gathers() as log, track_band_stats() as bstats:
         dord = distributed_nested_dissection(dg, seed=0, cfg=cfg,
                                              return_tree=True)
     perm = dord.assemble()
@@ -194,8 +309,67 @@ SCRIPT = textwrap.dedent("""
                            for q in range(len(vtx) - 1)])
     out["sharded_assembly_eq"] = bool(np.array_equal(flat, perm))
     out["shards_holding_frags"] = int((dord.fragment_shards() > 0).sum())
+    # alternating-color schedule: every sharded band refinement of the
+    # run must have zero cross-shard conflicts / repair kicks
+    out["band_refines"] = len(bstats)
+    out["alt_refines"] = sum(1 for s in bstats if s["schedule"] == "alt")
+    out["conflict_total"] = int(sum(sum(s["conflicts"]) for s in bstats))
+    out["repair_kicks"] = int(sum(sum(s["repairs"]) for s in bstats))
+    print(json.dumps(out))
+""")
 
-    # --- 2. band paths at the fallback threshold -----------------------
+
+def _check_nd(out):
+    assert out["perm_ok"], "distributed ordering is not a permutation"
+    # the tentpole claim: every centralizing gather stays under the
+    # configured thresholds — no full-graph adjacency / permutation on
+    # one host
+    assert out["max_gather"] <= out["bound"], \
+        f"gather of {out['max_gather']} exceeds threshold {out['bound']}"
+    assert out["max_gather"] < out["n"] // 2
+    assert out["sharded_assembly_eq"], \
+        "assemble_sharded() differs from the gathered assembly"
+    assert out["shards_holding_frags"] > 1, \
+        "ordering fragments all landed on one shard"
+    # the alternating-color schedule is the default and must run
+    # conflict-free: zero 0-1 arcs detected, zero repair kicks
+    assert out["alt_refines"] > 0, "no sharded band refinement happened"
+    assert out["conflict_total"] == 0, \
+        f"{out['conflict_total']} cross-shard conflicts under the schedule"
+    assert out["repair_kicks"] == 0, \
+        f"{out['repair_kicks']} conflict-repair kicks under the schedule"
+
+
+def test_gather_free_distributed_nd():
+    """Reduced-size default variant (784 vertices, 8 shards)."""
+    _check_nd(_run_script(ND_SCRIPT.format(side=28)))
+
+
+@pytest.mark.slow
+def test_gather_free_distributed_nd_full():
+    """Full-size variant (1600 vertices, 8 shards; CI spmd job)."""
+    out = _run_script(ND_SCRIPT.format(side=40))
+    assert out["n"] == 1600 and out["bound"] == 256
+    _check_nd(out)
+
+
+BAND_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    from repro.core.dgraph import (_raster_flat, distribute, distributed_bfs,
+                                   shard_vector, track_halos, valid_mask)
+    from repro.core.dnd import (DNDConfig, _band_refine_level_sh,
+                                track_band_stats)
+    from repro.core.band import extract_band, project_band
+    from repro.core.fm import fm_lane_count, refine_parts
+    from repro.graphs import generators as G
+    from repro.util import mix_seeds
+
+    out = {}
+
+    # --- band paths at the fallback threshold --------------------------
     g2 = G.grid2d(24, 24)
     dg2 = distribute(g2, 4)
     col = np.arange(g2.n) % 24
@@ -203,6 +377,8 @@ SCRIPT = textwrap.dedent("""
     part_sh = shard_vector(dg2, part, fill=3)
     ccfg = DNDConfig(band_central_threshold=10 ** 9)   # force centralized
     scfg = DNDConfig(band_central_threshold=0)         # force sharded
+    lcfg = DNDConfig(band_central_threshold=0,         # legacy schedule
+                     band_alt_colors=False)
     ref_cfg = DNDConfig()
     # host reference: the centralized pipeline's band refine, same inputs
     dist_sh = np.asarray(distributed_bfs(
@@ -221,48 +397,97 @@ SCRIPT = textwrap.dedent("""
     def flat_part(ps):
         return _raster_flat(dg2, ps).astype(np.int8)
 
-    def crossing(pf):
-        src = np.repeat(np.arange(g2.n), g2.degrees())
-        return int(((pf[src] == 0) & (pf[g2.adjncy] == 1)).sum())
+    def crossing(g, pf):
+        src = np.repeat(np.arange(g.n), g.degrees())
+        return int(((pf[src] == 0) & (pf[g.adjncy] == 1)).sum())
 
     cen = flat_part(_band_refine_level_sh(dg2, part_sh.copy(), 5, 4, ccfg))
-    shd = flat_part(_band_refine_level_sh(dg2, part_sh.copy(), 5, 4, scfg))
+    with track_band_stats() as bs_a, track_halos() as hl_a:
+        shd = flat_part(_band_refine_level_sh(dg2, part_sh.copy(), 5, 4,
+                                              scfg))
+    with track_band_stats() as bs_l, track_halos() as hl_l:
+        leg = flat_part(_band_refine_level_sh(dg2, part_sh.copy(), 5, 4,
+                                              lcfg))
     out["central_eq_host"] = bool(np.array_equal(cen, ref))
-    out["central_valid"] = crossing(cen) == 0
-    out["sharded_valid"] = crossing(shd) == 0
-    w_c = int(g2.vwgt[cen == 2].sum())
-    w_s = int(g2.vwgt[shd == 2].sum())
-    out["sep_w_central"] = w_c
-    out["sep_w_sharded"] = w_s
+    out["central_valid"] = crossing(g2, cen) == 0
+    out["sharded_valid"] = crossing(g2, shd) == 0
+    out["legacy_valid"] = crossing(g2, leg) == 0
+    out["sep_w_central"] = int(g2.vwgt[cen == 2].sum())
+    out["sep_w_sharded"] = int(g2.vwgt[shd == 2].sum())
+    out["alt_conflicts"] = int(sum(bs_a[0]["conflicts"]))
+    # per-phase halo budget: stats track the exchanges of one refinement;
+    # cross-check against the instrumented global count
+    out["alt_halos"] = len(hl_a)
+    out["alt_halos_stats"] = bs_a[0]["halos"]
+    out["alt_phases"] = bs_a[0]["phases"]
+    out["legacy_halos"] = len(hl_l)
+    out["legacy_phases"] = bs_l[0]["phases"]
+    out["sync_rounds"] = scfg.band_sync_rounds
+
+    # --- legacy-schedule repair regression (satellite bugfix) ----------
+    # a gid-random rgg puts nearly every band edge across shards, so the
+    # lock-all-boundary schedule reliably produces conflicts: the repair
+    # fallback runs, and the run completing proves the rest-of-graph
+    # anchor assertion (which replaced the silent clamp) held through
+    # every repair round
+    g3 = G.rgg2d(420, seed=2)
+    rpart = np.where(np.arange(g3.n) < g3.n // 2, 0, 1).astype(np.int8)
+    src3 = np.repeat(np.arange(g3.n), g3.degrees())
+    fringe = (rpart[src3] == 1) & (rpart[g3.adjncy] == 0)
+    rpart[src3[fringe]] = 2
+    dg3 = distribute(g3, 4)
+    rpart_sh = shard_vector(dg3, rpart, fill=3)
+    with track_band_stats() as bs_r:
+        leg1 = _band_refine_level_sh(dg3, rpart_sh.copy(), 0, 4, lcfg)
+        leg2 = _band_refine_level_sh(dg3, rpart_sh.copy(), 0, 4, lcfg)
+    out["rgg_legacy_repairs"] = int(sum(bs_r[0]["repairs"]))
+    out["rgg_legacy_anchor_min"] = int(bs_r[0]["anchor_min"])
+    out["rgg_legacy_deterministic"] = bool(
+        np.array_equal(np.asarray(leg1), np.asarray(leg2)))
+    out["rgg_legacy_valid"] = crossing(
+        g3, _raster_flat(dg3, np.asarray(leg1)).astype(np.int8)) == 0
+    # the alternating schedule stays conflict-free on the same adversarial
+    # sharding (nearly 100% boundary vertices)
+    with track_band_stats() as bs_ra:
+        alt3 = _band_refine_level_sh(dg3, rpart_sh.copy(), 0, 4, scfg)
+    out["rgg_alt_conflicts"] = int(sum(bs_ra[0]["conflicts"]))
+    out["rgg_alt_valid"] = crossing(
+        g3, _raster_flat(dg3, np.asarray(alt3)).astype(np.int8)) == 0
     print(json.dumps(out))
 """)
 
 
-def test_gather_free_distributed_nd():
-    res = subprocess.run([sys.executable, "-c", SCRIPT],
-                         capture_output=True, text=True, timeout=560,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": os.environ.get("HOME", "/root"),
-                              "JAX_PLATFORMS": os.environ.get(
-                                  "JAX_PLATFORMS", "cpu")})
-    assert res.returncode == 0, res.stderr[-2000:]
-    out = json.loads(res.stdout.strip().splitlines()[-1])
-    assert out["perm_ok"], "distributed ordering is not a permutation"
-    # the tentpole claim: every centralizing gather stays under the
-    # configured thresholds — no full-graph adjacency / permutation on
-    # one host (n = 1600 here, bound = 256)
-    assert out["max_gather"] <= out["bound"], \
-        f"gather of {out['max_gather']} exceeds threshold {out['bound']}"
-    assert out["max_gather"] < out["n"] // 2
-    assert out["sharded_assembly_eq"], \
-        "assemble_sharded() differs from the gathered assembly"
-    assert out["shards_holding_frags"] > 1, \
-        "ordering fragments all landed on one shard"
-    # band-path equivalence at the fallback threshold: centralized path
-    # is bit-identical to the host pipeline's band refine; the sharded
-    # path stays a valid separator of comparable weight
+def test_band_schedules_budget_and_repair():
+    out = _run_script(BAND_SCRIPT)
+    # centralized path is bit-identical to the host pipeline's band
+    # refine; both sharded schedules keep the separator valid
     assert out["central_eq_host"], \
         "centralized band path diverges from host extract_band pipeline"
-    assert out["central_valid"] and out["sharded_valid"]
-    assert out["sep_w_sharded"] <= 2 * out["sep_w_central"] + 8, \
+    assert out["central_valid"] and out["sharded_valid"] \
+        and out["legacy_valid"]
+    # sharded-vs-centralized band quality under the alternating schedule
+    assert out["sep_w_sharded"] <= 1.5 * out["sep_w_central"] + 8, \
         (out["sep_w_sharded"], out["sep_w_central"])
+    assert out["alt_conflicts"] == 0
+    # halo budget: one exchange per color phase -> two per sync round,
+    # exactly the PR 3 locked-ghost baseline (which exchanged twice per
+    # round); the constant setup (vwgt + initial parts + round-0 color
+    # validation) does not grow with rounds
+    R = out["sync_rounds"]
+    assert out["alt_phases"] == 2 * R
+    assert out["alt_halos"] == out["alt_halos_stats"]   # tracker agrees
+    assert out["alt_halos"] - 3 == 2 * R, out["alt_halos"]
+    per_round_alt = (out["alt_halos"] - 3) / R
+    per_round_legacy_pr3 = 2.0          # the locked-ghost baseline
+    assert per_round_alt <= per_round_legacy_pr3
+    assert out["legacy_halos"] - 2 <= 2 * R     # restructured legacy
+    # the repair fallback: driven for real on the adversarial rgg case,
+    # deterministic, validity restored, and the anchor-weight assertion
+    # (no silent clamping) held through every repaired round
+    assert out["rgg_legacy_repairs"] > 0, \
+        "legacy schedule produced no conflicts; repair path untested"
+    assert out["rgg_legacy_deterministic"] and out["rgg_legacy_valid"]
+    assert out["rgg_legacy_anchor_min"] >= 0
+    assert out["rgg_alt_conflicts"] == 0, \
+        "alternating schedule conflicted on the adversarial sharding"
+    assert out["rgg_alt_valid"]
