@@ -12,7 +12,22 @@ jax initializes).  Emits ``BENCH_dnd.json``:
     1.05 with the alternating-color band schedule);
   * wall-clock of the distributed driver on 1 / 2 / 4 / 8 virtual devices
     (CPU shard_map collectives: this tracks dispatch overhead trends, not
-    real-accelerator speedup);
+    real-accelerator speedup), plus ``p8_over_p1`` — the ratio the
+    frontier driver is accountable for (launch latency used to grow with
+    tree width; lane-stacking caps per-wave launches at the bucket
+    count, asserted ≤ the bound the CI spmd job also re-checks).  The
+    two ratio endpoints are min-of-2 steady-state timings — virtual
+    devices oversubscribe small CPU runners, so single samples are too
+    noisy to gate on;
+  * ``launches_by_level`` (per graph): the frontier driver's per-wave
+    outstanding works / shape buckets / collective launches by kind,
+    with ``launch_budget_ok`` asserting launches == buckets on every
+    wave — O(buckets × rounds) per level, not O(siblings × rounds);
+  * ``stage_s``: per-stage wall-clock of the p=8 runs (match / bfs /
+    halo / band-FM / rebuild / endgame) from ``dgraph.instrument()``;
+  * ``match_gather_words``: total all_gather words of the matching
+    launches — 3 dense buffers per round since the grant gather-back
+    compaction (was 4);
   * ``max_gather``: the largest centralizing gather (``to_host`` /
     ``unshard_vector`` element count) observed during the p=8 runs —
     the gather-free pipeline keeps it bounded by the configured
@@ -65,7 +80,7 @@ def main() -> None:
         return
     import numpy as np
     from benchmarks.common import row
-    from repro.core.dgraph import distribute, track_gathers
+    from repro.core.dgraph import distribute, instrument
     from repro.core.dnd import (DNDConfig, distributed_nested_dissection,
                                 track_band_stats)
     from repro.core.nd import nested_dissection
@@ -78,16 +93,32 @@ def main() -> None:
     wall = {p: 0.0 for p in DEVICE_COUNTS}
     ratios = []
     max_gather = 0
+    stage_s = {}
+    match_words = 0
+    budget_ok = True
     for name, g in graphs.items():
         perm_h = nested_dissection(g, seed=0, nproc=8)
         opc_h = nnz_opc(g, perm_h)[1]
         entry = {"n": g.n, "opc_host": opc_h}
         for p in DEVICE_COUNTS:
             dg = distribute(g, p)
-            t0 = time.perf_counter()
-            with track_gathers() as gathers:
-                perm_d = distributed_nested_dissection(dg, seed=0)
-            dt = time.perf_counter() - t0
+            # the endpoints of the gated p8/p1 ratio are timed as the
+            # min of two runs: virtual host devices oversubscribe small
+            # CPU runners, so single samples swing ~1.7x run-to-run —
+            # the second (in-process-warm) run measures the steady-state
+            # dispatch cost the frontier claim is about, with compile
+            # amortized by the persistent cache
+            reps = 2 if p in (min(DEVICE_COUNTS), max(DEVICE_COUNTS)) \
+                else 1
+            dt = None
+            for rep in range(reps):
+                t0 = time.perf_counter()
+                with instrument() as ins_rep:
+                    perm_d = distributed_nested_dissection(dg, seed=0)
+                dt_rep = time.perf_counter() - t0
+                dt = dt_rep if dt is None else min(dt, dt_rep)
+                if rep == 0:
+                    ins = ins_rep
             wall[p] += dt
             entry[f"t_p{p}_s"] = round(dt, 3)
             if p == max(DEVICE_COUNTS):
@@ -95,12 +126,23 @@ def main() -> None:
                 entry["opc_dnd"] = opc_d
                 entry["opc_ratio"] = round(opc_d / opc_h, 4)
                 ratios.append(opc_d / opc_h)
-                entry["max_gather"] = max(s for _, s in gathers)
+                entry["max_gather"] = max(s for _, s in ins.gathers)
                 max_gather = max(max_gather, entry["max_gather"])
+                # frontier wave accounting: works vs buckets vs launches
+                entry["launches_by_level"] = ins.waves
+                entry["launch_budget_ok"] = all(
+                    w["launches"][k] == w["buckets"][k] <= w["works"][k]
+                    for w in ins.waves for k in w["launches"])
+                budget_ok &= entry["launch_budget_ok"]
+                for k, v in ins.stage_s.items():
+                    stage_s[k] = stage_s.get(k, 0.0) + v
+                match_words += sum(l["words"] for l in ins.launches
+                                   if l["kind"] == "dmatch")
         per_graph[name] = entry
         row(f"dnd/{name}", entry[f"t_p8_s"] * 1e6,
             n=g.n, opc_ratio=entry["opc_ratio"],
             max_gather=entry["max_gather"],
+            budget_ok=entry["launch_budget_ok"],
             **{f"t_p{p}": entry[f"t_p{p}_s"] for p in DEVICE_COUNTS})
 
     # forced-sharded-band run (§3.3 alternating-color schedule): lower
@@ -131,9 +173,15 @@ def main() -> None:
         kicks=band["repair_kicks"], pulls=band["ghost_pulls"])
 
     ratio_mean = float(np.mean(ratios))
+    p_lo, p_hi = min(DEVICE_COUNTS), max(DEVICE_COUNTS)
+    p8_over_p1 = wall[p_hi] / wall[p_lo] if wall[p_lo] else 0.0
     out = {
         "graphs": per_graph,
         "wallclock_s": {str(p): round(wall[p], 3) for p in DEVICE_COUNTS},
+        "p8_over_p1": round(p8_over_p1, 3),
+        "stage_s": {k: round(v, 3) for k, v in sorted(stage_s.items())},
+        "launch_budget_ok": budget_ok,
+        "match_gather_words": match_words,
         "opc_ratio_mean": round(ratio_mean, 4),
         "max_gather": max_gather,
         "band": band,
@@ -141,8 +189,23 @@ def main() -> None:
     with open("BENCH_dnd.json", "w") as f:
         json.dump(out, f, indent=2)
     row("dnd/opc_ratio_mean", 0.0, ratio=round(ratio_mean, 4))
+    row("dnd/wallclock", wall[p_hi] * 1e6, p8_over_p1=round(p8_over_p1, 3),
+        **{f"stage_{k}": round(v, 2) for k, v in sorted(stage_s.items())})
     # asserts run after the dump so a failing bound still leaves the
     # artifact around for debugging
+    assert budget_ok, \
+        "frontier wave launched more collectives than shape buckets"
+    # lane-stacking caps per-wave launches at the bucket count, so the
+    # wall-clock must stop growing with virtual device count the way the
+    # depth-first driver's did: its baseline ratio was 3.03x (42.3s ->
+    # 128.3s).  Measured frontier ratios: ~1.7x cold-compile-cache,
+    # ~2.5x warm (a warm cache speeds p=1 more than the
+    # collective-bound p=8).  The gate sits below the depth-first
+    # baseline with noise margin; the tracked number lives in the
+    # artifact
+    assert p8_over_p1 <= 2.75, (
+        f"p=8 wall-clock is {p8_over_p1:.2f}x p=1 — frontier batching "
+        "regressed toward per-sibling launch growth (baseline 3.03x)")
     assert band["band_refines"] > 0, "no sharded band refinement ran"
     assert band["conflict_total"] == 0 and band["repair_kicks"] == 0, (
         "alternating-color schedule reported conflicts: "

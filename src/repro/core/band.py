@@ -108,6 +108,8 @@ def execute_bfs_works(works: Sequence[BFSWork],
         else:
             dist = np.asarray(bfs_distance_multi(
                 jnp.asarray(nbr_b), jnp.asarray(src_b), width))
+        from repro.core.dgraph import _note_launch
+        _note_launch("bfs", 0, L, L, (n_pad, d_pad), width, 0)
         for j, i in enumerate(idxs):
             results[i] = dist[j, :works[i].nbr.shape[0]]
     return results                                           # type: ignore

@@ -105,6 +105,8 @@ def execute_match_works(works: Sequence[MatchWork]) -> List[np.ndarray]:
             nbr_b[j, :n, :d] = works[i].nbr
             wgt_b[j, :n, :d] = works[i].wgt
         m = np.asarray(match_batch(nbr_b, wgt_b, keys, rounds=rounds))
+        from repro.core.dgraph import _note_launch
+        _note_launch("match", 0, L, L, (n_pad, d_pad), rounds, 0)
         for j, i in enumerate(idxs):
             n = works[i].nbr.shape[0]
             mi = m[j, :n].astype(np.int64)

@@ -31,7 +31,15 @@ only ghost values — so per-shard memory is O(local arcs).
 Two kinds of routines live here (DESIGN.md §4):
 
   * **device collectives** (``halo_exchange_fn``, ``distributed_bfs``,
-    ``distributed_matching``) — ``shard_map`` programs over the parts axis;
+    ``distributed_matching``) — ``shard_map`` programs over the parts axis.
+    Each is the one-lane special case of its **lane-stacked** form
+    (``halo_exchange_stacked``, ``distributed_bfs_stacked``,
+    ``distributed_matching_stacked``): same-bucket graphs stack along a
+    leading lane axis and ONE launch — with one fused ``all_gather`` per
+    internal round for the whole stack — serves all of them.  Per-lane
+    reductions are within-lane, so lane-stacked results are bit-identical
+    to singleton execution (the frontier driver of ``core.dnd`` relies on
+    this, exactly as ``fm.execute_fm_works`` does for FM lanes).
   * **structure rebuilds** (``distribute``, ``dgraph_induced``,
     ``dgraph_fold``, ``dgraph_coarsen``) — host-side reshuffles of the
     stacked arrays that model the owner-routed ``MPI_Alltoallv`` of the
@@ -39,19 +47,22 @@ Two kinds of routines live here (DESIGN.md §4):
     arrays (the analog of the exchange's send/receive buffers, O(arcs)
     words), never a centralized CSR graph.
 
-The *gather* API — ``to_host`` and ``unshard_vector``, the only two
-routines that intentionally materialize one centralized object from a
-distributed one — is instrumented: inside a ``track_gathers()`` block every
-call records its element count, which is how the gather-free tests assert
-that ``distributed_nested_dissection`` never centralizes more than its
-configured thresholds (ISSUE: no O(n) per-host cliff).
+All instrumentation hangs off ONE entry point, ``instrument()``: the
+centralizing gathers (``to_host`` / ``unshard_vector`` element counts, the
+gather-free guarantee), host-level halo exchanges (the per-round band sync
+budget), per-launch collective counters (kind, lanes, all_gather words —
+how the frontier driver's launch budget is asserted), sharded-band
+refinement stats, per-stage wall-clock, and frontier wave summaries.
+``track_gathers`` / ``track_halos`` (and ``dnd.track_band_stats``) are
+thin compatibility views over the same block.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 import functools
-from typing import List, Optional, Sequence, Tuple
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -102,7 +113,16 @@ def _build_dgraph(vtxdist: np.ndarray, src: np.ndarray, dst: np.ndarray,
     Parallel arcs are deduplicated with accumulated weights (exactly
     ``Graph.from_edges``'s canonicalization), so rebuilding through here
     matches the centralized builders arc-for-arc.
+
+    Timed as the ``rebuild`` stage (every structure rebuild funnels
+    through here), so the bench's per-stage wall-clock breakdown can
+    separate host reshuffles from device collectives.
     """
+    with stage("rebuild"):
+        return _build_dgraph_impl(vtxdist, src, dst, w, vwgt, bucket=bucket)
+
+
+def _build_dgraph_impl(vtxdist, src, dst, w, vwgt, bucket=True) -> DGraph:
     vtxdist = np.asarray(vtxdist, dtype=np.int64)
     nparts = len(vtxdist) - 1
     n = int(vtxdist[-1])
@@ -206,59 +226,129 @@ def make_parts_mesh(nparts: int) -> Mesh:
 
 
 # ------------------------------------------------------------------ #
-# gather instrumentation (the gather-free tests hang off this)
+# instrumentation: one entry point for every counter (DESIGN.md §4)
 # ------------------------------------------------------------------ #
-_GATHER_LOG: Optional[List[Tuple[str, int]]] = None
-_HALO_LOG: Optional[List[int]] = None
+@dataclasses.dataclass(eq=False)      # identity semantics: nested blocks
+class Instrumentation:                # with equal contents must not alias
+    """Counters recorded by one ``instrument()`` block.
+
+    ``gathers``   — one ``(kind, n_elements)`` per centralizing gather
+      (``to_host`` / ``unshard_vector``); the gather-free tests bound it.
+    ``halos``     — exchanged element count (P · n_loc_max words) per
+      host-level halo exchange, one entry per *work*: a lane-stacked
+      launch serving L works appends L entries, so this keeps measuring
+      the per-task synchronization budget the band tests bound.
+      Exchanges fused inside jitted sweeps (BFS relaxations, matching
+      rounds) are not counted.
+    ``launches``  — one dict per device launch:
+      ``{"kind", "nparts", "lanes", "lanes_pad", "bucket", "rounds",
+      "words"}``.  Distributed ``shard_map`` collectives record kinds
+      ``dhalo`` / ``dbfs`` / ``dmatch`` with ``words`` = the launch's
+      total ``all_gather`` traffic in elements summed over its internal
+      rounds; the centralized bucketed executors record ``fm`` / ``bfs``
+      / ``match`` (nparts 0, words 0) per dispatch.  This is the counter
+      behind the frontier driver's launch-budget assertions (the wave
+      summaries count *these records*, not their own bookkeeping) and
+      the matching grant-compaction measurement.
+    ``band_stats``— one dict per sharded-band refinement (appended by
+      ``dnd``'s band task; see ``dnd.track_band_stats``).
+    ``stage_s``   — accumulated wall-clock seconds per pipeline stage
+      (``match`` / ``bfs`` / ``halo`` / ``fm`` / ``rebuild`` /
+      ``endgame``).
+    ``waves``     — one summary dict per frontier wave (appended by the
+      frontier driver): outstanding works / shape buckets / launches by
+      work kind.
+    """
+    gathers: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+    halos: List[int] = dataclasses.field(default_factory=list)
+    launches: List[dict] = dataclasses.field(default_factory=list)
+    band_stats: List[dict] = dataclasses.field(default_factory=list)
+    stage_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+    waves: List[dict] = dataclasses.field(default_factory=list)
+
+
+_ACTIVE: List[Instrumentation] = []
+
+
+@contextlib.contextmanager
+def instrument():
+    """Record all data-plane counters executed inside the block.
+
+    Yields an ``Instrumentation``.  Blocks nest: every active block
+    receives every event (so a ``track_halos()`` view inside a broader
+    ``instrument()`` sees the same exchanges the outer block does).
+    """
+    ins = Instrumentation()
+    _ACTIVE.append(ins)
+    try:
+        yield ins
+    finally:
+        # remove by identity: list.remove would use __eq__ and could
+        # evict an outer block whose recorded contents happen to match
+        for k in range(len(_ACTIVE) - 1, -1, -1):
+            if _ACTIVE[k] is ins:
+                del _ACTIVE[k]
+                break
 
 
 @contextlib.contextmanager
 def track_gathers():
-    """Record every centralizing gather executed inside the block.
-
-    Yields a list that receives one ``(kind, n_elements)`` tuple per
-    ``to_host`` / ``unshard_vector`` call.  The gather-free ND tests run
-    ``distributed_nested_dissection`` under this and assert that no
-    recorded gather exceeds the configured centralization thresholds —
-    i.e. that no full-graph adjacency or full permutation is ever
-    materialized on a single host above those thresholds.
-    """
-    global _GATHER_LOG
-    prev, _GATHER_LOG = _GATHER_LOG, []
-    try:
-        yield _GATHER_LOG
-    finally:
-        _GATHER_LOG = prev
-
-
-def _note_gather(kind: str, size: int) -> None:
-    if _GATHER_LOG is not None:
-        _GATHER_LOG.append((kind, int(size)))
+    """Compat view over ``instrument()``: yields its ``gathers`` list."""
+    with instrument() as ins:
+        yield ins.gathers
 
 
 @contextlib.contextmanager
 def track_halos():
-    """Record every host-level halo exchange executed inside the block.
+    """Compat view over ``instrument()``: yields its ``halos`` list."""
+    with instrument() as ins:
+        yield ins.halos
 
-    Yields a list that receives the exchanged element count (P · n_loc_max
-    words pushed through the collective) per call to a
-    ``halo_exchange_fn`` closure.  Exchanges fused *inside* jitted sweeps
-    (the per-step relaxations of ``distributed_bfs``, the matching
-    rounds) are not counted — this tracks the per-round synchronization
-    budget of host-driven loops, which is what the sharded-band
-    refinement tests bound.
-    """
-    global _HALO_LOG
-    prev, _HALO_LOG = _HALO_LOG, []
-    try:
-        yield _HALO_LOG
-    finally:
-        _HALO_LOG = prev
+
+def _note_gather(kind: str, size: int) -> None:
+    for ins in _ACTIVE:
+        ins.gathers.append((kind, int(size)))
 
 
 def _note_halo(size: int) -> None:
-    if _HALO_LOG is not None:
-        _HALO_LOG.append(int(size))
+    for ins in _ACTIVE:
+        ins.halos.append(int(size))
+
+
+def _note_launch(kind: str, nparts: int, lanes: int, lanes_pad: int,
+                 bucket: Tuple[int, ...], rounds: int, words: int) -> None:
+    if not _ACTIVE:
+        return
+    rec = {"kind": kind, "nparts": int(nparts), "lanes": int(lanes),
+           "lanes_pad": int(lanes_pad), "bucket": tuple(bucket),
+           "rounds": int(rounds), "words": int(words)}
+    for ins in _ACTIVE:
+        ins.launches.append(rec)
+
+
+def _note_band_stats(stats: dict) -> None:
+    for ins in _ACTIVE:
+        ins.band_stats.append(stats)
+
+
+def _note_stage(name: str, seconds: float) -> None:
+    for ins in _ACTIVE:
+        ins.stage_s[name] = ins.stage_s.get(name, 0.0) + float(seconds)
+
+
+def _note_wave(summary: dict) -> None:
+    for ins in _ACTIVE:
+        ins.waves.append(summary)
+
+
+@contextlib.contextmanager
+def stage(name: str):
+    """Time a pipeline stage into every active ``instrument()`` block."""
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        _note_stage(name, time.perf_counter() - t0)
 
 
 # ------------------------------------------------------------------ #
@@ -586,52 +676,107 @@ def dgraph_coarsen(dg: DGraph, match_sh: np.ndarray,
 
 
 # ------------------------------------------------------------------ #
-# halo exchange
+# lane-stacked halo exchange
 # ------------------------------------------------------------------ #
-def _halo_local(x, gids, vtxdist):
-    """Per-shard halo body: all_gather owned slabs + gather by global id.
+def dgraph_bucket(dg: DGraph) -> Tuple[int, int, int, int]:
+    """Jit bucket of a DGraph: ``(nparts, n_loc_max, dmax, n_ghost_max)``.
 
-    ``x`` (n_loc_max,) this shard's values; returns (n_loc_max + G,).
-    Shared by the standalone halo fn, the BFS sweep and the matching
-    protocol (all run inside ``shard_map`` over the parts axis).
+    Same-bucket graphs share compiled collectives AND may lane-stack into
+    one launch (``distribute(bucket=True)`` pads shard shapes to powers
+    of two precisely so sibling subgraphs of a recursion land together).
     """
-    allx = jax.lax.all_gather(x, "parts")               # (P, n_loc_max)
-    owner = jnp.clip(jnp.searchsorted(vtxdist, gids, side="right") - 1,
-                     0, allx.shape[0] - 1)
-    local = jnp.clip(gids - vtxdist[owner], 0, allx.shape[1] - 1)
-    vals = jnp.where(gids >= 0, allx[owner, local], 0)
-    return jnp.concatenate([x, vals])
+    return (dg.nparts, dg.n_loc_max, dg.nbr_gst.shape[2],
+            dg.ghost_gid.shape[1])
+
+
+def _lane_pad(arrs: Sequence[np.ndarray]) -> Tuple[np.ndarray, int]:
+    """Stack per-lane arrays, padding the lane axis to a power of two.
+
+    Padding lanes duplicate lane 0 (real, discarded work — no garbage
+    values reach reductions) so the jit cache sees O(log L) lane counts
+    instead of one entry per frontier width.  Returns ``(stacked, L)``
+    with L the real lane count.
+    """
+    L = len(arrs)
+    pad = pow2(L, 1) - L
+    return np.stack(list(arrs) + [arrs[0]] * pad), L
+
+
+def _halo_gather(x, gids, vtxdist):
+    """Lane-stacked per-shard halo body: ONE fused all_gather, all lanes.
+
+    ``x`` (L, n_loc_max) this shard's values per lane; ``gids`` (L, G)
+    per-lane ghost manifests; ``vtxdist`` (L, P+1) per-lane ranges.
+    Returns (L, n_loc_max + G).  Shared by the standalone halo launch,
+    the BFS sweep and the matching protocol (all run inside
+    ``shard_map`` over the parts axis).
+    """
+    allx = jax.lax.all_gather(x, "parts")            # (P, L, n_loc_max)
+    owner = jnp.clip(
+        jax.vmap(functools.partial(jnp.searchsorted, side="right"))(
+            vtxdist, gids) - 1, 0, allx.shape[0] - 1)
+    local = jnp.clip(gids - jnp.take_along_axis(vtxdist, owner, axis=1),
+                     0, allx.shape[2] - 1)
+    lane = jnp.arange(x.shape[0])[:, None]
+    vals = jnp.where(gids >= 0, allx[owner, lane, local], 0)
+    return jnp.concatenate([x, vals], axis=1)
 
 
 @functools.lru_cache(maxsize=None)
-def _halo_jit(nparts: int, n_loc_max: int, n_ghost_max: int, dtype: str):
+def _halo_stack_jit(nparts: int, n_loc_max: int, n_ghost_max: int,
+                    lanes: int, dtype: str):
     mesh = make_parts_mesh(nparts)
 
     def body(x, gids, vtxdist):
-        return _halo_local(x[0], gids[0], vtxdist)[None]
+        return _halo_gather(x[:, 0], gids[:, 0], vtxdist)[:, None]
 
     fn = shard_map(body, mesh=mesh,
-                   in_specs=(P("parts", None), P("parts", None), P(None)),
-                   out_specs=P("parts", None))
+                   in_specs=(P(None, "parts", None), P(None, "parts", None),
+                             P(None, None)),
+                   out_specs=P(None, "parts", None))
     return jax.jit(fn)
+
+
+def halo_exchange_stacked(dgs: Sequence[DGraph],
+                          xs: Sequence[np.ndarray]) -> List[np.ndarray]:
+    """Halo-exchange many same-bucket graphs in ONE shard_map launch.
+
+    ``xs[i]`` is graph i's (P, n_loc_max) sharded vector (one dtype for
+    the whole stack); returns the (P, n_loc_max + n_ghost_max) extended
+    vectors.  Lane i's result is bit-identical to a singleton exchange
+    on ``dgs[i]`` — the gather indices are per-lane, the one fused
+    ``all_gather`` only amortizes launch latency.
+    """
+    key = dgraph_bucket(dgs[0])
+    assert all(dgraph_bucket(d) == key for d in dgs), \
+        "halo_exchange_stacked needs same-bucket graphs"
+    nparts, nlm, _, G = key
+    xs = [np.asarray(x) for x in xs]
+    assert all(x.dtype == xs[0].dtype for x in xs)
+    x_st, L = _lane_pad(xs)
+    gid_st, _ = _lane_pad([d.ghost_gid.astype(np.int32) for d in dgs])
+    vtx_st, _ = _lane_pad([d.vtxdist.astype(np.int32) for d in dgs])
+    fn = _halo_stack_jit(nparts, nlm, G, x_st.shape[0], str(x_st.dtype))
+    with stage("halo"):
+        out = np.asarray(fn(jnp.asarray(x_st), jnp.asarray(gid_st),
+                            jnp.asarray(vtx_st)))
+    _note_launch("dhalo", nparts, L, x_st.shape[0], key[1:], 1,
+                 x_st.shape[0] * nparts * nlm)
+    for _ in range(L):                   # per-work sync budget (see doc)
+        _note_halo(nparts * nlm)
+    return [out[i] for i in range(L)]
 
 
 def halo_exchange_fn(dg: DGraph):
     """Returns halo(x (P, n_loc_max)) -> (P, n_loc_max + n_ghost_max).
 
-    The underlying jitted collective is cached per (nparts, padded shapes,
-    dtype) and takes the ghost manifest / ranges as traced arguments, so it
-    is reused by every same-bucket graph.
+    The one-lane convenience wrapper over ``halo_exchange_stacked``; the
+    underlying jitted collective is cached per (bucket, lane count,
+    dtype) and takes the ghost manifest / ranges as traced arguments, so
+    it is reused by every same-bucket graph.
     """
-    gids = jnp.asarray(dg.ghost_gid, jnp.int32)
-    vtxdist = jnp.asarray(dg.vtxdist, jnp.int32)
-
     def halo(x):
-        x = jnp.asarray(x)
-        _note_halo(dg.nparts * dg.n_loc_max)
-        fn = _halo_jit(dg.nparts, dg.n_loc_max, dg.ghost_gid.shape[1],
-                       str(x.dtype))
-        return fn(x, gids, vtxdist)
+        return halo_exchange_stacked([dg], [x])[0]
     return halo
 
 
@@ -652,31 +797,58 @@ def halo_reference(dg: DGraph, x: np.ndarray) -> np.ndarray:
 
 
 # ------------------------------------------------------------------ #
-# distributed band-BFS
+# distributed band-BFS (lane-stacked)
 # ------------------------------------------------------------------ #
 @functools.lru_cache(maxsize=None)
-def _bfs_jit(nparts: int, n_loc_max: int, dmax: int, n_ghost_max: int,
-             width: int):
+def _bfs_stack_jit(nparts: int, n_loc_max: int, dmax: int, n_ghost_max: int,
+                   width: int, lanes: int):
     from repro.kernels.ops import ell_relax_step
     mesh = make_parts_mesh(nparts)
 
     def body(nbr, src, gids, vtxdist):
-        nbr, src, gids = nbr[0], src[0], gids[0]
+        nbr, src, gids = nbr[:, 0], src[:, 0], gids[:, 0]
         BIG = jnp.int32(2 ** 30)
         dist = jnp.where(src != 0, 0, BIG).astype(jnp.int32)
 
         def step(dist, _):
-            ext = _halo_local(dist, gids, vtxdist)
+            ext = _halo_gather(dist, gids, vtxdist)
             return jnp.minimum(dist, ell_relax_step(nbr, ext, BIG)), None
 
         dist, _ = jax.lax.scan(step, dist, None, length=width)
-        return dist[None]
+        return dist[:, None]
 
     fn = shard_map(body, mesh=mesh,
-                   in_specs=(P("parts", None, None), P("parts", None),
-                             P("parts", None), P(None)),
-                   out_specs=P("parts", None))
+                   in_specs=(P(None, "parts", None, None),
+                             P(None, "parts", None), P(None, "parts", None),
+                             P(None, None)),
+                   out_specs=P(None, "parts", None))
     return jax.jit(fn)
+
+
+def distributed_bfs_stacked(dgs: Sequence[DGraph],
+                            srcs: Sequence[np.ndarray],
+                            width: int) -> List[np.ndarray]:
+    """Band-distance sweeps of many same-bucket graphs in ONE launch.
+
+    One fused ``all_gather`` per relaxation step serves every lane; the
+    per-lane min-plus relaxations (``ell_relax_step`` with a lane axis)
+    never mix lanes, so each lane equals its singleton sweep bit-for-bit.
+    """
+    key = dgraph_bucket(dgs[0])
+    assert all(dgraph_bucket(d) == key for d in dgs), \
+        "distributed_bfs_stacked needs same-bucket graphs"
+    nparts, nlm, dmax, G = key
+    nbr_st, L = _lane_pad([d.nbr_gst for d in dgs])
+    src_st, _ = _lane_pad([np.asarray(s, np.int32) for s in srcs])
+    gid_st, _ = _lane_pad([d.ghost_gid.astype(np.int32) for d in dgs])
+    vtx_st, _ = _lane_pad([d.vtxdist.astype(np.int32) for d in dgs])
+    fn = _bfs_stack_jit(nparts, nlm, dmax, G, width, nbr_st.shape[0])
+    with stage("bfs"):
+        dist = np.asarray(fn(jnp.asarray(nbr_st), jnp.asarray(src_st),
+                             jnp.asarray(gid_st), jnp.asarray(vtx_st)))
+    _note_launch("dbfs", nparts, L, nbr_st.shape[0], key[1:], width,
+                 width * nbr_st.shape[0] * nparts * nlm)
+    return [dist[i] for i in range(L)]
 
 
 def distributed_bfs(dg: DGraph, src_mask: np.ndarray,
@@ -684,96 +856,168 @@ def distributed_bfs(dg: DGraph, src_mask: np.ndarray,
     """Band-graph distance sweep (§3.3) on the distributed structure: one
     halo exchange per relaxation — the paper's 'spreading distance
     information from all of the separator vertices, using our halo exchange
-    routine'."""
-    fn = _bfs_jit(dg.nparts, dg.n_loc_max, dg.nbr_gst.shape[2],
-                  dg.ghost_gid.shape[1], width)
-    dist = fn(jnp.asarray(dg.nbr_gst), jnp.asarray(src_mask, jnp.int32),
-              jnp.asarray(dg.ghost_gid, jnp.int32),
-              jnp.asarray(dg.vtxdist, jnp.int32))
-    return np.asarray(dist)
+    routine'.  One-lane wrapper over ``distributed_bfs_stacked``."""
+    return distributed_bfs_stacked([dg], [src_mask], width)[0]
 
 
 # ------------------------------------------------------------------ #
-# distributed heavy-edge matching (paper §3.2)
+# distributed heavy-edge matching (paper §3.2, lane-stacked)
 # ------------------------------------------------------------------ #
 @functools.lru_cache(maxsize=None)
-def _matching_jit(nparts: int, n_loc_max: int, dmax: int, n_ghost_max: int,
-                  rounds: int):
+def _matching_stack_jit(nparts: int, n_loc_max: int, dmax: int,
+                        n_ghost_max: int, rounds: int, lanes: int):
     mesh = make_parts_mesh(nparts)
     INT_MAX = jnp.iinfo(jnp.int32).max
+    nseg = nparts * n_loc_max + 1       # winner-table slots (+1 dump)
 
-    def body(nbr, ew, gids, vtxdist, nloc, seed):
-        nbr, ew, gids, nloc = nbr[0], ew[0], gids[0], nloc[0]
+    def body(nbr, ew, gids, vtxdist, nloc, seeds):
+        nbr, ew, gids, nloc = nbr[:, 0], ew[:, 0], gids[:, 0], nloc[:, 0]
+        L = nbr.shape[0]
+        lane = jnp.arange(L)
         pidx = jax.lax.axis_index("parts")
-        lo = vtxdist[pidx]
+        lo = vtxdist[:, pidx]                             # (L,)
         li = jnp.arange(n_loc_max, dtype=jnp.int32)
-        valid_loc = li < nloc
-        my_gid = jnp.where(valid_loc, lo + li, -1)
-        ext_gid = jnp.concatenate([my_gid, gids])       # (n_loc_max + G,)
+        valid_loc = li[None, :] < nloc[:, None]
+        my_gid = jnp.where(valid_loc, lo[:, None] + li[None, :], -1)
+        ext_gid = jnp.concatenate([my_gid, gids], axis=1)
         valid_e = nbr >= 0
-        nb = jnp.where(valid_e, nbr, 0)
+        nb = jnp.where(valid_e, nbr, 0)                   # (L, nlm, d)
         ewf = ew.astype(jnp.float32)
         # proposer gid of every (shard, row) of the gathered proposal
         # buffers; every shard can compute it from vtxdist alone
-        prop_gid_flat = (vtxdist[:nparts, None]
-                         + jnp.arange(n_loc_max, dtype=jnp.int32)[None, :]
-                         ).reshape(-1)
+        prop_gid_flat = (vtxdist[:, :nparts, None]
+                         + li[None, None, :]).reshape(L, -1)
+
+        def ext_at(ext, idx):
+            # per-lane gather: ext (L, m), idx (L, n, d) -> (L, n, d)
+            return jnp.take_along_axis(
+                ext, idx.reshape(L, -1), axis=1).reshape(idx.shape)
+
+        def owner_loc(t):
+            # (L, K) global ids -> (owner shard, local slot) per lane
+            tsafe = jnp.maximum(t, 0)
+            ow = jnp.clip(
+                jax.vmap(functools.partial(jnp.searchsorted, side="right"))(
+                    vtxdist, tsafe) - 1, 0, nparts - 1)
+            lc = jnp.clip(tsafe - jnp.take_along_axis(vtxdist, ow, axis=1),
+                          0, n_loc_max - 1)
+            return ow, lc
 
         def round_fn(match, r):
             unmatched = (match < 0) & valid_loc
-            ext_unm = _halo_local(unmatched.astype(jnp.int32), gids,
-                                  vtxdist) != 0
+            ext_unm = _halo_gather(unmatched.astype(jnp.int32), gids,
+                                   vtxdist) != 0
             # hash coin: any shard can evaluate any vertex's side locally
-            is_prop_ext = (hash_mix(ext_gid, r, seed) & 1) == 1
+            is_prop_ext = (hash_mix(ext_gid, r, seeds[:, None]) & 1) == 1
             # --- propose: heaviest unmatched acceptor neighbor
-            tgt_slots = ext_gid[nb]                     # (n_loc_max, d)
-            cand = (valid_e & ext_unm[nb] & ~is_prop_ext[nb]
+            tgt_slots = ext_at(ext_gid, nb)               # (L, nlm, d)
+            cand = (valid_e & ext_at(ext_unm, nb) & ~ext_at(is_prop_ext, nb)
                     & (tgt_slots >= 0))
-            tie = hash_unit(my_gid[:, None], tgt_slots, r + 17)
+            tie = hash_unit(my_gid[:, :, None], tgt_slots, r + 17)
             score = jnp.where(cand, ewf + tie, -jnp.inf)
-            slot = jnp.argmax(score, axis=1)
-            has = jnp.any(cand, axis=1) & unmatched & is_prop_ext[:n_loc_max]
-            prop_tgt = jnp.where(has, tgt_slots[li, slot], -1)
-            prop_w = jnp.where(has, ewf[li, slot], 0.0)
+            slot = jnp.argmax(score, axis=2)[:, :, None]
+            has = (jnp.any(cand, axis=2) & unmatched
+                   & is_prop_ext[:, :n_loc_max])
+            prop_tgt = jnp.where(
+                has, jnp.take_along_axis(tgt_slots, slot, 2)[..., 0], -1)
+            prop_w = jnp.where(
+                has, jnp.take_along_axis(ewf, slot, 2)[..., 0], 0.0)
 
-            # --- grant: every shard grants for its own local acceptors
-            allt = jax.lax.all_gather(prop_tgt, "parts").reshape(-1)
-            allw = jax.lax.all_gather(prop_w, "parts").reshape(-1)
-            mine = (allt >= lo) & (allt < lo + nloc)
-            seg = jnp.where(mine, allt - lo, n_loc_max)
+            # --- grant: ONE gather of the proposals; every shard then
+            # derives the same per-acceptor winner table locally (pure
+            # function of the gathered buffers), so no grant buffer is
+            # ever gathered back — the notify leg costs zero words
+            allt = jnp.moveaxis(jax.lax.all_gather(prop_tgt, "parts"),
+                                0, 1).reshape(L, -1)      # (L, P·nlm)
+            allw = jnp.moveaxis(jax.lax.all_gather(prop_w, "parts"),
+                                0, 1).reshape(L, -1)
+            okp = allt >= 0
+            ow, lc = owner_loc(allt)
+            seg = jnp.where(okp, ow * n_loc_max + lc, nseg - 1)
+            seg_l = (lane[:, None] * nseg + seg).reshape(-1)
             gsc = allw + hash_unit(prop_gid_flat, allt, r + 31)
-            gsc = jnp.where(mine, gsc, -jnp.inf)
-            best = jax.ops.segment_max(gsc, seg,
-                                       num_segments=n_loc_max + 1)
-            is_best = mine & (gsc >= best[seg])
+            gsc = jnp.where(okp, gsc, -jnp.inf).reshape(-1)
+            best = jax.ops.segment_max(gsc, seg_l, num_segments=L * nseg)
+            is_best = okp.reshape(-1) & (gsc >= best[seg_l])
             winner = jax.ops.segment_min(
-                jnp.where(is_best, prop_gid_flat, INT_MAX), seg,
-                num_segments=n_loc_max + 1)[:n_loc_max]
-            can_accept = unmatched & ~is_prop_ext[:n_loc_max]
-            grant = jnp.where(can_accept & (winner < INT_MAX), winner, -1)
+                jnp.where(is_best, prop_gid_flat.reshape(-1), INT_MAX),
+                seg_l, num_segments=L * nseg).reshape(L, nseg)
 
-            # --- notify: proposers read their target's grant
-            allg = jax.lax.all_gather(grant, "parts")   # (P, n_loc_max)
-            tsafe = jnp.maximum(prop_tgt, 0)
-            owner_t = jnp.clip(
-                jnp.searchsorted(vtxdist, tsafe, side="right") - 1,
-                0, nparts - 1)
-            loc_t = jnp.clip(tsafe - vtxdist[owner_t], 0, n_loc_max - 1)
-            got = (prop_tgt >= 0) & (allg[owner_t, loc_t] == my_gid)
+            # acceptors: my slots of the winner table
+            win_mine = jax.lax.dynamic_slice_in_dim(
+                winner, pidx * n_loc_max, n_loc_max, axis=1)
+            can_accept = unmatched & ~is_prop_ext[:, :n_loc_max]
+            grant = jnp.where(can_accept & (win_mine < INT_MAX),
+                              win_mine, -1)
+            # proposers: the winner of the slot they proposed to (a
+            # proposal existing implies the target could accept this
+            # round — ``cand`` checked the exchanged unmatched mask and
+            # the acceptor-side coin, the same values the owner sees)
+            ow_p, lc_p = owner_loc(prop_tgt)
+            win_t = jnp.take_along_axis(winner, ow_p * n_loc_max + lc_p,
+                                        axis=1)
+            got = (prop_tgt >= 0) & (win_t == my_gid)
             match = jnp.where(got, prop_tgt, match)
             match = jnp.where(grant >= 0, grant, match)
             return match, None
 
-        match0 = jnp.full((n_loc_max,), -1, dtype=jnp.int32)
+        match0 = jnp.full((L, n_loc_max), -1, dtype=jnp.int32)
         match, _ = jax.lax.scan(round_fn, match0,
                                 jnp.arange(rounds, dtype=jnp.int32))
-        return match[None]
+        return match[:, None]
 
     fn = shard_map(body, mesh=mesh,
-                   in_specs=(P("parts", None, None), P("parts", None, None),
-                             P("parts", None), P(None), P("parts"), P(None)),
-                   out_specs=P("parts", None))
+                   in_specs=(P(None, "parts", None, None),
+                             P(None, "parts", None, None),
+                             P(None, "parts", None), P(None, None),
+                             P(None, "parts"), P(None)),
+                   out_specs=P(None, "parts", None))
     return jax.jit(fn)
+
+
+def distributed_matching_stacked(dgs: Sequence[DGraph],
+                                 seeds: Sequence[int],
+                                 rounds: int = 8) -> List[np.ndarray]:
+    """Match many same-bucket graphs in ONE shard_map launch.
+
+    Returns, per graph, the sharded (P, n_loc_max) mate global ids
+    (``flat=False`` contract: -1→self masking and owner-routed symmetry
+    repair applied).  Coins, tiebreaks and the per-lane grant reductions
+    are functions of each lane's own (gids, seed) alone, so lane i's
+    matching is bit-identical to ``distributed_matching(dgs[i], ...)``.
+    """
+    key = dgraph_bucket(dgs[0])
+    assert all(dgraph_bucket(d) == key for d in dgs), \
+        "distributed_matching_stacked needs same-bucket graphs"
+    nparts, nlm, dmax, G = key
+    nbr_st, L = _lane_pad([d.nbr_gst for d in dgs])
+    ew_st, _ = _lane_pad([d.ewgt_gst.astype(np.int32) for d in dgs])
+    gid_st, _ = _lane_pad([d.ghost_gid.astype(np.int32) for d in dgs])
+    vtx_st, _ = _lane_pad([d.vtxdist.astype(np.int32) for d in dgs])
+    nloc_st, _ = _lane_pad([d.n_loc.astype(np.int32) for d in dgs])
+    seed_st, _ = _lane_pad([np.int32(s & 0x7FFFFFFF) for s in seeds])
+    fn = _matching_stack_jit(nparts, nlm, dmax, G, rounds, nbr_st.shape[0])
+    with stage("match"):
+        m = np.asarray(fn(jnp.asarray(nbr_st), jnp.asarray(ew_st),
+                          jnp.asarray(gid_st), jnp.asarray(vtx_st),
+                          jnp.asarray(nloc_st), jnp.asarray(seed_st)))
+    # per round: unmatched-mask halo + proposal targets + proposal
+    # weights; the grant gather-back of the pre-frontier protocol is gone
+    _note_launch("dmatch", nparts, L, nbr_st.shape[0], key[1:], rounds,
+                 rounds * 3 * nbr_st.shape[0] * nparts * nlm)
+    out = []
+    for i, dg in enumerate(dgs):
+        gid = shard_gids(dg)
+        valid = gid >= 0
+        m_sh = m[i].astype(np.int64)
+        m_sh = np.where(valid & (m_sh >= 0) & (m_sh < dg.n_global),
+                        m_sh, gid)
+        # defensive symmetry repair (protocol is symmetric by
+        # construction): each vertex checks its mate's mate via an
+        # owner-routed pull
+        mate_of_mate = pull_by_gid(dg, m_sh, m_sh, fill=-1)
+        out.append(np.where(valid & (mate_of_mate == gid), m_sh, gid))
+    return out
 
 
 def distributed_matching(dg: DGraph, seed: int, rounds: int = 8,
@@ -783,33 +1027,23 @@ def distributed_matching(dg: DGraph, seed: int, rounds: int = 8,
     The paper's request/grant protocol (§3.2) with the collectives of this
     file: each round, unmatched proposers pick their heaviest unmatched
     acceptor neighbor (ghosts included, via halo exchange of the unmatched
-    mask); proposals are gathered; every shard grants the best proposal for
-    each of its local acceptors; grants are gathered back and both ends
-    commit.  Coin flips and tiebreaks are hashes of (gid, round, seed), so
-    every shard evaluates any vertex's state without extra messages — and
-    the result is independent of the shard layout.
+    mask); proposals are gathered once, and every shard derives the same
+    per-acceptor winner table from the gathered buffers — acceptors grant
+    from their slots, proposers read their target's slot, and both ends
+    commit with **no grant gather-back** (the notify leg of the
+    pre-frontier protocol cost a dense (P, n_loc_max) all_gather per
+    round).  Coin flips and tiebreaks are hashes of (gid, round, seed),
+    so every shard evaluates any vertex's state without extra messages —
+    and the result is independent of the shard layout.
 
     With ``flat`` (legacy contract) the matching is gathered into a flat
     global (n,) array with match[v] = v for singletons — same contract as
     ``matching.heavy_edge_matching``.  With ``flat=False`` it stays
     sharded: (P, n_loc_max) mate global ids (-1 on padding), the form
     ``dgraph_coarsen`` consumes — no centralization at any size.
+    One-lane wrapper over ``distributed_matching_stacked``.
     """
-    fn = _matching_jit(dg.nparts, dg.n_loc_max, dg.nbr_gst.shape[2],
-                       dg.ghost_gid.shape[1], rounds)
-    m = fn(jnp.asarray(dg.nbr_gst), jnp.asarray(dg.ewgt_gst, jnp.int32),
-           jnp.asarray(dg.ghost_gid, jnp.int32),
-           jnp.asarray(dg.vtxdist, jnp.int32),
-           jnp.asarray(dg.n_loc, jnp.int32),
-           jnp.asarray([seed & 0x7FFFFFFF], jnp.int32))
-    gid = shard_gids(dg)
-    valid = gid >= 0
-    m_sh = np.asarray(m).astype(np.int64)
-    m_sh = np.where(valid & (m_sh >= 0) & (m_sh < dg.n_global), m_sh, gid)
-    # defensive symmetry repair (protocol is symmetric by construction):
-    # each vertex checks its mate's mate via an owner-routed pull
-    mate_of_mate = pull_by_gid(dg, m_sh, m_sh, fill=-1)
-    m_sh = np.where(valid & (mate_of_mate == gid), m_sh, gid)
+    m_sh = distributed_matching_stacked([dg], [seed], rounds)[0]
     if flat:
         return unshard_vector(dg, m_sh)
     return m_sh

@@ -1,4 +1,5 @@
-"""Gather-free distributed nested dissection (paper §2.2 + §3).
+"""Gather-free distributed nested dissection (paper §2.2 + §3),
+frontier-batched.
 
 End-to-end *sharded* ordering pipeline: above the centralization
 thresholds, every structure the recursion touches stays distributed —
@@ -21,27 +22,45 @@ thresholds, every structure the recursion touches stays distributed —
     (``ell_relax_step`` sweeps, one halo exchange per width step).  Small
     bands (≤ ``band_central_threshold``) are centralized and refined by
     k multi-sequential FM lanes exactly as before; large bands stay
-    sharded: each shard refines its local fragment (ghost ring locked,
-    boundary gains read through halo-exchanged parts and weights) in
-    alternating-color phases — boundary vertices two-colored by gid
-    hash, at most one movable endpoint per cross-shard edge per phase,
-    ghost pulls pushed to owners — so the phases are conflict-free by
-    construction (asserted; the deterministic symmetric-hash repair
-    survives as the legacy schedule's fallback), and all shard
-    fragments of a phase run as ONE bucketed ``fm_refine_multi``
-    dispatch;
+    sharded, refined in alternating-color phases (gid-hash two-coloring,
+    at most one movable endpoint per cross-shard edge per phase, ghost
+    pulls pushed to owners — conflict-free by construction, asserted);
   * **distributed ordering tree** (§2.2) — ``DistOrdering`` records, per
     ND node, its column-block range in the inverse permutation and, per
-    shard, the locally-held ordering fragments.  Fragment offsets come
-    from prefix sums over per-shard fragment sizes (the paper's offset
-    exchange), so the inverse permutation can be *assembled sharded*
-    (``assemble_sharded``) without ever concatenating it on one host;
+    shard, the locally-held ordering fragments, so the inverse
+    permutation can be *assembled sharded* (``assemble_sharded``);
   * **centralize threshold** (§3.1) — subtrees below
-    ``centralize_threshold`` (or whose group folded to one process) are
-    gathered — the only ``to_host`` calls above the coarsest/band sizes —
-    and handed, all together, to the ordering service's breadth-first
-    scheduler, which batches their matching / BFS / FM work across every
-    deferred subtree at once.
+    ``centralize_threshold`` are gathered and handed, all together, to
+    the ordering service's breadth-first scheduler.
+
+**Frontier-batched execution** (DESIGN.md §4).  Every stage above is
+written as a *work-yielding generator* (mirroring ``nd.separator_task``):
+instead of dispatching collectives, tasks yield typed descriptors —
+``DMatchWork`` (one distributed-matching request), ``DBFSWork`` (one
+band-distance sweep), ``DHaloWork`` (one host-level halo exchange), plain
+``FMWork`` / ``BFSWork`` / ``MatchWork`` for centralized subproblems, and
+lists of ``FMWork`` for the per-phase fragment batches of the sharded
+band — and receive the results.  Two drivers execute the same generators:
+
+  * the **depth-first driver** (``DNDConfig.frontier=False``) runs each
+    work the moment it is yielded and spawned subtasks to completion in
+    order — the PR 2–4 recursion's execution order, kept as the
+    bit-parity oracle;
+  * the **frontier driver** (default) walks the whole task tree in
+    readiness *waves*: all live tasks advance until blocked on device
+    work, then the wave's outstanding works execute bucketed — every
+    same-bucket ``DGraph`` stacks along a lane axis into ONE
+    ``shard_map`` launch (``dgraph.*_stacked``), and centralized works
+    run through the service's bucketed executors.  Sibling subgraphs,
+    fold-dup duplicates and deferred endgames all join the same
+    frontier, so per-wave launch count is O(shape buckets), not
+    O(live subproblems).
+
+Lane-stacked collectives are bit-identical to singleton execution
+(within-lane reductions — same argument as ``execute_fm_works``), so the
+two drivers produce **bit-identical orderings**; the frontier tests
+assert this plus the per-wave launch budget (launches == buckets) via
+``dgraph.instrument()``.
 
 Per-host memory is O(n/p + thresholds): the gather-free tests run the
 driver under ``dgraph.track_gathers()`` and assert no centralizing
@@ -53,24 +72,29 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.band import band_graph_with_anchors
+from repro.core import dgraph as _dg
+from repro.core.band import BFSWork, band_graph_with_anchors, \
+    execute_bfs_works
+from repro.core.coarsen import MatchWork, execute_match_works
 from repro.core.dgraph import (DGraph, boundary_mask, color_by_gid,
-                               dgraph_coarsen, dgraph_fold,
-                               dgraph_induced, distributed_bfs,
-                               distributed_matching, halo_exchange_fn,
-                               np_hash_mix, pull_by_gid, reshard_vector,
-                               scatter_by_gid, shard_gids, shard_vector,
-                               to_host, unshard_vector, valid_mask)
+                               dgraph_bucket, dgraph_coarsen, dgraph_fold,
+                               dgraph_induced, distributed_bfs_stacked,
+                               distributed_matching_stacked,
+                               halo_exchange_stacked, np_hash_mix,
+                               pull_by_gid, reshard_vector, scatter_by_gid,
+                               shard_gids, shard_vector, to_host,
+                               unshard_vector, valid_mask)
 from repro.core.fm import (FMWork, execute_fm_works, fm_lane_count,
-                           refine_parts, separator_is_valid)
+                           separator_is_valid)
 from repro.core.graph import Graph
 from repro.core.initsep import initial_parts
 from repro.core.nd import (NDConfig, child_nprocs, child_seeds,
-                           compute_separator, separator_perm)
+                           separator_perm, separator_task)
 from repro.util import mix_seeds
 
 
@@ -92,6 +116,9 @@ class DNDConfig(NDConfig):
     ``band_check_conflicts``: assert the alternating schedule really
     produced zero cross-shard 0–1 conflicts (the repair rule stays as a
     guarded fallback either way).
+    ``frontier``: drive the recursion breadth-first with lane-stacked
+    wave execution (the default); False replays the depth-first
+    one-launch-per-step driver (the bit-parity oracle).
     """
     centralize_threshold: int = 256     # below: gather + defer to scheduler
     match_rounds: int = 8               # distributed matching rounds
@@ -101,6 +128,7 @@ class DNDConfig(NDConfig):
     band_shard_lanes: int = 4           # FM lanes per shard (sharded band)
     band_alt_colors: bool = True        # alternating-color boundary moves
     band_check_conflicts: bool = True   # assert zero conflicts under alt
+    frontier: bool = True               # wave-batched lane-stacked driver
 
 
 # ------------------------------------------------------------------ #
@@ -292,29 +320,23 @@ def conflict_loser(vg: np.ndarray, ug: np.ndarray, rnd: int,
 # ------------------------------------------------------------------ #
 # band-refinement instrumentation (bench + schedule-invariant tests)
 # ------------------------------------------------------------------ #
-_BAND_LOG: Optional[List[dict]] = None
-
-
 @contextlib.contextmanager
 def track_band_stats():
     """Record one stats dict per sharded-band refinement in the block.
 
-    Each ``_sharded_band_fm`` call appends ``{"schedule", "n", "nparts",
-    "phases", "conflicts" (directed conflict-arc count per phase),
-    "repairs" (vertices kicked back to the separator per phase), "pulls"
-    (ghost pulls pushed to owners per phase), "anchor_min" (smallest
-    rest-of-graph anchor weight seen), "halos" (host-level halo
-    exchanges executed)}``.  The bench reports these; the gather-free
-    tests assert zero conflicts under the alternating schedule and that
-    the per-round halo budget does not grow versus the locked-ghost
-    baseline.
+    Compat view over ``dgraph.instrument()`` (its ``band_stats``
+    channel).  Each sharded-band task appends ``{"schedule", "n",
+    "nparts", "phases", "conflicts" (directed conflict-arc count per
+    phase), "repairs" (vertices kicked back to the separator per phase),
+    "pulls" (ghost pulls pushed to owners per phase), "anchor_min"
+    (smallest rest-of-graph anchor weight seen), "halos" (host-level
+    halo exchanges executed)}``.  The bench reports these; the
+    gather-free tests assert zero conflicts under the alternating
+    schedule and that the per-round halo budget does not grow versus the
+    locked-ghost baseline.
     """
-    global _BAND_LOG
-    prev, _BAND_LOG = _BAND_LOG, []
-    try:
-        yield _BAND_LOG
-    finally:
-        _BAND_LOG = prev
+    with _dg.instrument() as ins:
+        yield ins.band_stats
 
 
 def _cross_conflicts(bpart: np.ndarray, part_ext: np.ndarray,
@@ -335,19 +357,58 @@ def _cross_conflicts(bpart: np.ndarray, part_ext: np.ndarray,
 
 
 # ------------------------------------------------------------------ #
+# typed device-work descriptors of the distributed data plane
+# ------------------------------------------------------------------ #
+@dataclasses.dataclass
+class DMatchWork:
+    """One distributed-matching request; result: (P, n_loc_max) mates."""
+    dg: DGraph
+    seed: int
+    rounds: int = 8
+
+
+@dataclasses.dataclass
+class DBFSWork:
+    """One distributed band-BFS request; result: (P, n_loc_max) dists."""
+    dg: DGraph
+    src: np.ndarray                     # (P, n_loc_max) int32 source mask
+    width: int
+
+
+@dataclasses.dataclass
+class DHaloWork:
+    """One host-level halo exchange; result: (P, n_loc_max + G) ext."""
+    dg: DGraph
+    x: np.ndarray                       # (P, n_loc_max)
+
+
+@dataclasses.dataclass
+class _Spawn:
+    """Yielded by a task to run subtasks; resumed with their results.
+
+    The depth-first driver runs them to completion in order; the
+    frontier driver advances them concurrently — this is how fold-dup
+    duplicate instances and the two dissection children of every node
+    join the same wave frontier.
+    """
+    tasks: List
+
+
+# ------------------------------------------------------------------ #
 # band refinement (§3.3): centralized below threshold, sharded above
 # ------------------------------------------------------------------ #
-def _centralize_band(dg: DGraph, part_sh: np.ndarray, dist_sh: np.ndarray,
-                     seed: int, k_fm: int, cfg: DNDConfig) -> np.ndarray:
+def _centralize_band_task(dg: DGraph, part_sh: np.ndarray,
+                          dist_sh: np.ndarray, seed: int, k_fm: int,
+                          cfg: DNDConfig):
     """Multi-sequential FM on the centralized band (small bands).
 
     The band subgraph is extracted in place (``dgraph_induced`` with
     ownership preserved), gathered — the band is O(n^{2/3}) on meshes,
     far below ``band_central_threshold`` — and refined by ``k_fm``
-    perturbed FM lanes; the winning separator is scattered back to the
-    owners.  Constructs the exact FM problem ``band.extract_band`` would
-    (shared ``band_graph_with_anchors``), so this path is bit-identical
-    to the centralized pipeline.
+    perturbed FM lanes (ONE yielded ``FMWork``); the winning separator
+    is scattered back to the owners.  Constructs the exact FM problem
+    ``band.extract_band`` would (shared ``band_graph_with_anchors``), so
+    this path is bit-identical to the centralized pipeline.
     """
     width = cfg.band_width
     v = valid_mask(dg)
@@ -366,17 +427,17 @@ def _centralize_band(dg: DGraph, part_sh: np.ndarray, dist_sh: np.ndarray,
     band, bpart_full, locked = band_graph_with_anchors(
         g_band, bpart, bdist, width, w_out0, w_out1)
     nbr_b, _ = band.to_ell()
-    bref, _, _ = refine_parts(
-        nbr_b, band.vwgt, bpart_full, locked, mix_seeds(seed, 7),
-        k_inst=k_fm, eps_frac=cfg.eps_frac, passes=cfg.fm_passes, n_pert=8)
+    bref, _, _ = yield FMWork(
+        nbr=nbr_b, vwgt=band.vwgt, part=bpart_full, locked=locked,
+        seed=mix_seeds(seed, 7), k_inst=k_fm, eps_frac=cfg.eps_frac,
+        passes=cfg.fm_passes, n_pert=8)
     assert separator_is_valid(nbr_b, bref)
 
     return scatter_by_gid(dg, part_sh, bgid, bref[:g_band.n])
 
 
-def _sharded_band_fm(dg: DGraph, part_sh: np.ndarray, keep_sh: np.ndarray,
-                     dist_sh: np.ndarray, seed: int,
-                     cfg: DNDConfig) -> np.ndarray:
+def _sharded_band_task(dg: DGraph, part_sh: np.ndarray, keep_sh: np.ndarray,
+                       dist_sh: np.ndarray, seed: int, cfg: DNDConfig):
     """Shard-local band FM with alternating-color boundary moves (§3.3).
 
     The band stays sharded: each shard refines the fragment it owns,
@@ -397,10 +458,12 @@ def _sharded_band_fm(dg: DGraph, part_sh: np.ndarray, keep_sh: np.ndarray,
     cannot disagree), which makes the fragment-local FM accounting
     globally exact and leaves the phase with **zero** cross-shard 0–1
     conflicts — checked as an invariant each phase.  All shard
-    fragments of a phase execute as ONE bucketed ``fm_refine_multi``
-    dispatch, and one halo exchange per phase both verifies the
-    invariant and feeds the next phase — the same per-round exchange
-    budget as the legacy schedule.
+    fragments of a phase are yielded as ONE ``FMWork`` list (bucketed
+    into one ``fm_refine_multi`` dispatch; under the frontier driver the
+    list batches with every other live band refinement of the wave), and
+    one halo exchange per phase both verifies the invariant and feeds
+    the next phase — the same per-round exchange budget as the legacy
+    schedule.
 
     The legacy schedule (``band_alt_colors=False``) keeps every local
     vertex movable every round and repairs concurrent-move conflicts
@@ -415,8 +478,8 @@ def _sharded_band_fm(dg: DGraph, part_sh: np.ndarray, keep_sh: np.ndarray,
         fills=(3, 0, -1))
     P = band_dg.nparts
     nlm = band_dg.n_loc_max
-    halo = halo_exchange_fn(band_dg)
-    vwgt_ext = np.asarray(halo(band_dg.vwgt.astype(np.int32)))
+    vwgt_ext = np.asarray((yield DHaloWork(band_dg,
+                                           band_dg.vwgt.astype(np.int32))))
     band_gid = shard_gids(band_dg)      # band-graph ids (colors, repair)
     vb = valid_mask(band_dg)
 
@@ -438,29 +501,6 @@ def _sharded_band_fm(dg: DGraph, part_sh: np.ndarray, keep_sh: np.ndarray,
     alt = cfg.band_alt_colors and P > 1
     if alt:
         bmask = boundary_mask(band_dg)
-
-    def round_coloring(r: int) -> Tuple[np.ndarray, np.ndarray]:
-        """Round r's coloring + yield set (salt rotates per round).
-
-        A fixed coloring would freeze the same tiebreak losers for the
-        whole refinement (dense boundaries starve); rotating the hash
-        salt per sync round unlocks a different subset each round while
-        the per-phase at-most-one-movable-endpoint invariant still holds
-        (the coloring is constant within a round).  Only round 0's ghost
-        colors are halo-validated — later colorings are the same pure
-        gid hash, recomputable locally.
-        """
-        hash_ext, color_ext = color_by_gid(band_dg, mix_seeds(seed, 29, r),
-                                           exchange=(r == 0))
-        # monochromatic cross-shard pairs: the (hash, gid)-smaller
-        # endpoint yields to its neighbor this round, so those edges
-        # too have at most one movable endpoint in their color's phase
-        hv_b, hu_b = hash_ext[pb, lib], hash_ext[pb, cb]
-        mono = color_ext[pb, lib] == color_ext[pb, cb]
-        u_wins = mono & ((hu_b > hv_b) | ((hu_b == hv_b) & (ug_b > vg_b)))
-        yields = np.zeros((P, nlm), bool)
-        yields[pb[u_wins], lib[u_wins]] = True
-        return color_ext[:, :nlm], yields
 
     n_phases = (2 if alt else 1) * cfg.band_sync_rounds
 
@@ -486,10 +526,41 @@ def _sharded_band_fm(dg: DGraph, part_sh: np.ndarray, keep_sh: np.ndarray,
                           bdist[p, :n_p], band_dg.vwgt[p, :n_p],
                           vwgt_ext[p, nlm:nlm + G_p]))
 
-    part_ext = np.asarray(halo(bpart.astype(np.int32)))
+    part_ext = np.asarray((yield DHaloWork(band_dg,
+                                           bpart.astype(np.int32))))
+    color = yield_to_nbr = None
     for ph in range(n_phases):
         if alt and ph % 2 == 0:
-            color, yield_to_nbr = round_coloring(ph // 2)
+            # round r's coloring + yield set (salt rotates per round): a
+            # fixed coloring would freeze the same tiebreak losers for
+            # the whole refinement (dense boundaries starve); rotating
+            # the hash salt per sync round unlocks a different subset
+            # each round while the per-phase at-most-one-movable-endpoint
+            # invariant still holds (the coloring is constant within a
+            # round).  Only round 0's ghost colors are halo-validated —
+            # later colorings are the same pure gid hash, recomputable
+            # locally.
+            r = ph // 2
+            hash_ext, color_ext = color_by_gid(
+                band_dg, mix_seeds(seed, 29, r), exchange=False)
+            if r == 0:
+                col_ext = np.asarray((yield DHaloWork(
+                    band_dg, color_ext[:, :nlm].astype(np.int32))))
+                gok = band_dg.ghost_gid >= 0
+                assert np.array_equal(
+                    np.where(gok, col_ext[:, nlm:], 0),
+                    np.where(gok, color_ext[:, nlm:].astype(np.int32), 0)
+                ), "halo-exchanged ghost colors disagree with the gid hash"
+            # monochromatic cross-shard pairs: the (hash, gid)-smaller
+            # endpoint yields to its neighbor this round, so those edges
+            # too have at most one movable endpoint in their color's phase
+            hv_b, hu_b = hash_ext[pb, lib], hash_ext[pb, cb]
+            mono = color_ext[pb, lib] == color_ext[pb, cb]
+            u_wins = mono & ((hu_b > hv_b)
+                             | ((hu_b == hv_b) & (ug_b > vg_b)))
+            yield_to_nbr = np.zeros((P, nlm), bool)
+            yield_to_nbr[pb[u_wins], lib[u_wins]] = True
+            color = color_ext[:, :nlm]
         w_glob = [w_out[s] + int(band_dg.vwgt[vb & (bpart == s)].sum())
                   for s in (0, 1)]
         works: List[FMWork] = []
@@ -547,9 +618,9 @@ def _sharded_band_fm(dg: DGraph, part_sh: np.ndarray, keep_sh: np.ndarray,
             stats["repairs"].append(0)
             stats["pulls"].append(0)
             continue            # the other color phase may still refine
+        fm_out = yield works    # ONE bucketed dispatch (wave-batched)
         pull_gids: List[np.ndarray] = []
-        for (p, gpart_in), (pf, _, _) in zip(shards,
-                                             execute_fm_works(works)):
+        for (p, gpart_in), (pf, _, _) in zip(shards, fm_out):
             n_p = int(band_dg.n_loc[p])
             G_p = int(band_dg.n_ghost[p])
             bpart[p, :n_p] = pf[:n_p]
@@ -571,7 +642,8 @@ def _sharded_band_fm(dg: DGraph, part_sh: np.ndarray, keep_sh: np.ndarray,
         # one halo exchange per phase: provides this phase's cross-shard
         # view for the conflict check AND the ghost parts of the next
         # phase — the per-round exchange budget of the legacy schedule
-        part_ext = np.asarray(halo(bpart.astype(np.int32)))
+        part_ext = np.asarray((yield DHaloWork(band_dg,
+                                               bpart.astype(np.int32))))
         stats["halos"] += 1
         cmask = _cross_conflicts(bpart, part_ext, pb, lib, cb)
         n_conf = int(cmask.sum())
@@ -591,19 +663,19 @@ def _sharded_band_fm(dg: DGraph, part_sh: np.ndarray, keep_sh: np.ndarray,
             # a vertex losing on several arcs is kicked once
             n_rep = len(np.unique(pk.astype(np.int64) * nlm + lk))
             bpart[pk, lk] = 2
-            part_ext = np.asarray(halo(bpart.astype(np.int32)))
+            part_ext = np.asarray((yield DHaloWork(
+                band_dg, bpart.astype(np.int32))))
             stats["halos"] += 1
         stats["repairs"].append(n_rep)
-    if _BAND_LOG is not None:
-        _BAND_LOG.append(stats)
+    _dg._note_band_stats(stats)
 
     # project back: each shard writes its refined local band parts to the
     # owners of the original vertices (carried in the bgid payload)
     return scatter_by_gid(dg, part_sh, np.asarray(bgid_sh)[vb], bpart[vb])
 
 
-def _band_refine_level_sh(dg: DGraph, part_sh: np.ndarray, seed: int,
-                          p_cur: int, cfg: DNDConfig) -> np.ndarray:
+def _band_refine_task(dg: DGraph, part_sh: np.ndarray, seed: int,
+                      p_cur: int, cfg: DNDConfig):
     """§3.3 at one distributed level: sharded BFS + FM refinement.
 
     The distance sweep always runs on the sharded structure (one halo
@@ -614,8 +686,8 @@ def _band_refine_level_sh(dg: DGraph, part_sh: np.ndarray, seed: int,
     k_fm = fm_lane_count(p_cur, cfg.k_fm_cap, cfg.fold_dup)
     v = valid_mask(dg)
     if cfg.use_band:
-        dist_sh = np.asarray(distributed_bfs(
-            dg, (part_sh == 2).astype(np.int32), cfg.band_width))
+        dist_sh = np.asarray((yield DBFSWork(
+            dg, (part_sh == 2).astype(np.int32), cfg.band_width)))
         dist_sh = np.where(v, dist_sh, np.int32(2 ** 30))
         keep = v & (dist_sh <= cfg.band_width)
     else:                               # ablation: refine the whole level
@@ -624,33 +696,46 @@ def _band_refine_level_sh(dg: DGraph, part_sh: np.ndarray, seed: int,
     band_n = int(keep.sum())
     if band_n + 2 <= cfg.band_central_threshold or dg.nparts == 1:
         if cfg.use_band:
-            return _centralize_band(dg, part_sh, dist_sh, seed, k_fm, cfg)
+            return (yield from _centralize_band_task(dg, part_sh, dist_sh,
+                                                     seed, k_fm, cfg))
         g = to_host(dg)
         part = unshard_vector(dg, part_sh).astype(np.int8)
         nbr_f, _ = g.to_ell()
-        part, _, _ = refine_parts(
-            nbr_f, g.vwgt, part, np.zeros(g.n, bool), mix_seeds(seed, 7),
+        part, _, _ = yield FMWork(
+            nbr=nbr_f, vwgt=g.vwgt, part=part,
+            locked=np.zeros(g.n, bool), seed=mix_seeds(seed, 7),
             k_inst=k_fm, eps_frac=cfg.eps_frac, passes=cfg.fm_passes,
             n_pert=8)
         assert separator_is_valid(nbr_f, part)
         return shard_vector(dg, part, fill=3)
-    return _sharded_band_fm(dg, part_sh, keep, dist_sh, seed, cfg)
+    return (yield from _sharded_band_task(dg, part_sh, keep, dist_sh, seed,
+                                          cfg))
+
+
+def _band_refine_level_sh(dg: DGraph, part_sh: np.ndarray, seed: int,
+                          p_cur: int, cfg: DNDConfig) -> np.ndarray:
+    """Synchronous wrapper over ``_band_refine_task`` (tests, ablation)."""
+    return _drive_depth_first(_band_refine_task(dg, part_sh, seed, p_cur,
+                                                cfg))
 
 
 # ------------------------------------------------------------------ #
 # distributed multilevel separator
 # ------------------------------------------------------------------ #
-def _coarsest_separator(g: Graph, seed: int, cfg: DNDConfig
-                        ) -> Optional[np.ndarray]:
-    """Initial separator on a (centralized) coarsest graph."""
+def _coarsest_task(g: Graph, seed: int, cfg: DNDConfig):
+    """Initial separator on a (centralized) coarsest graph.
+
+    The one FM refinement is yielded, so coarsest separators of every
+    live branch share a bucketed dispatch under the frontier driver.
+    """
     if g.n < 4:
         return None
     parts0 = initial_parts(g, seed, k_tries=min(cfg.k_init, 32))
     nbr, _ = g.to_ell()
-    part, _, _ = refine_parts(
-        nbr, g.vwgt, parts0[0], np.zeros(g.n, bool), mix_seeds(seed, 0),
-        k_inst=len(parts0), eps_frac=cfg.eps_frac, passes=3, n_pert=4,
-        parts_init=parts0)
+    part, _, _ = yield FMWork(
+        nbr=nbr, vwgt=g.vwgt, part=parts0[0], locked=np.zeros(g.n, bool),
+        seed=mix_seeds(seed, 0), k_inst=len(parts0), eps_frac=cfg.eps_frac,
+        passes=3, n_pert=4, parts_init=parts0)
     assert separator_is_valid(nbr, part)
     return part
 
@@ -663,9 +748,8 @@ def _centralized_part(dg: DGraph, part: Optional[np.ndarray]
     return shard_vector(dg, part.astype(np.int8), fill=3)
 
 
-def _dsep_sh(dg: DGraph, seed: int, cfg: DNDConfig,
-             inst_budget: int) -> Optional[np.ndarray]:
-    """Multilevel separator of a sharded graph (part vector stays sharded).
+def _dsep_task(dg: DGraph, seed: int, cfg: DNDConfig, inst_budget: int):
+    """Multilevel separator of a sharded graph, as a work-yielding task.
 
     Returns a (P, n_loc_max) int8 part vector (0/1/2, 3 on padding) or
     None when degenerate.  ``inst_budget`` caps the fold-dup instance
@@ -673,29 +757,34 @@ def _dsep_sh(dg: DGraph, seed: int, cfg: DNDConfig,
     threshold" — here also a memory cap, mirroring
     ``coarsen_multilevel``'s ``max_instances``).  Centralization only
     happens at bounded sizes: fully-folded instances (n < 2·fold
-    threshold) and coarsest graphs (n ≤ coarse_target).
+    threshold) and coarsest graphs (n ≤ coarse_target).  Fully-folded
+    single-process instances run ``nd.separator_task`` *inline* (via
+    ``yield from``), so their matching / BFS / FM works batch with the
+    rest of the frontier.
     """
     p, n = dg.nparts, dg.n_global
     if n < 4:
         return None
     if p <= 1:
         # a fully-folded instance: one process, the sequential pipeline
-        return _centralized_part(dg, compute_separator(to_host(dg), seed,
-                                                       1, cfg))
+        part = yield from separator_task(to_host(dg), seed, 1, cfg)
+        return _centralized_part(dg, part)
     if n <= cfg.coarse_target:
-        return _centralized_part(dg, _coarsest_separator(to_host(dg), seed,
-                                                         cfg))
+        part = yield from _coarsest_task(to_host(dg), seed, cfg)
+        return _centralized_part(dg, part)
 
     if cfg.fold_dup and n / p < cfg.fold_threshold and inst_budget >= 2:
         # fold-dup: the group splits; each half holds a duplicate of the
         # folded structure and runs an independent multilevel instance.
-        # Best projected separator wins at rejoin (§3.2).
+        # Best projected separator wins at rejoin (§3.2).  The two
+        # halves are spawned as sibling tasks, so under the frontier
+        # driver their device waves lane-stack with each other (and with
+        # every other live instance of the tree).
         dgf = dgraph_fold(dg)
-        cand: List[np.ndarray] = []
-        for s_half in (mix_seeds(seed, 11), mix_seeds(seed, 12)):
-            ph = _dsep_sh(dgf, s_half, cfg, inst_budget // 2)
-            if ph is not None:
-                cand.append(ph)
+        halves = yield _Spawn([
+            _dsep_task(dgf, s_half, cfg, inst_budget // 2)
+            for s_half in (mix_seeds(seed, 11), mix_seeds(seed, 12))])
+        cand = [ph for ph in halves if ph is not None]
         if not cand:
             return None
         best = min(cand,
@@ -703,27 +792,27 @@ def _dsep_sh(dg: DGraph, seed: int, cfg: DNDConfig,
         # the rejoined group refines the winning duplicate's separator at
         # the fold level with its full complement of FM lanes (§3.3)
         part_sh = reshard_vector(dgf, dg, best, fill=3)
-        return _band_refine_level_sh(dg, part_sh, mix_seeds(seed, 13), p,
-                                     cfg)
+        return (yield from _band_refine_task(dg, part_sh,
+                                             mix_seeds(seed, 13), p, cfg))
 
-    match_sh = distributed_matching(dg, mix_seeds(seed, 5),
-                                    cfg.match_rounds, flat=False)
+    match_sh = yield DMatchWork(dg, mix_seeds(seed, 5), cfg.match_rounds)
     cdg, cmap_sh = dgraph_coarsen(dg, match_sh)
     if cdg.n_global > n * cfg.min_reduction:    # stalled coarsening
         if n <= max(cfg.centralize_threshold, cfg.coarse_target):
-            return _centralized_part(dg, _coarsest_separator(to_host(dg),
-                                                             seed, cfg))
+            part = yield from _coarsest_task(to_host(dg), seed, cfg)
+            return _centralized_part(dg, part)
         if cdg.n_global >= n:
             return None
         # slow but nonzero progress on a big graph: keep going sharded
-    part_c = _dsep_sh(cdg, mix_seeds(seed, 101), cfg, inst_budget)
+    part_c = yield from _dsep_task(cdg, mix_seeds(seed, 101), cfg,
+                                   inst_budget)
     if part_c is None:
         return None
     # separator projection: fine vertex reads its coarse vertex's part
     # from the coarse owner (coarse vertices stayed on their
     # representative's owner, so most reads are shard-local)
     part_sh = pull_by_gid(cdg, part_c, cmap_sh, fill=3).astype(np.int8)
-    return _band_refine_level_sh(dg, part_sh, seed, p, cfg)
+    return (yield from _band_refine_task(dg, part_sh, seed, p, cfg))
 
 
 def distributed_separator(dg: DGraph, seed: int,
@@ -732,13 +821,16 @@ def distributed_separator(dg: DGraph, seed: int,
     """Top-level entry: sharded separator of a distributed graph.
 
     Returns the (P, n_loc_max) int8 part vector (0/1/2, padding 3) or
-    None when the graph is degenerate.
+    None when the graph is degenerate.  Drives ``_dsep_task`` depth-first
+    (the frontier batching lives in ``distributed_nested_dissection``'s
+    driver, which owns a whole task tree).
     """
     cfg = cfg or DNDConfig()
-    return _dsep_sh(dg, seed, cfg, max(cfg.k_fm_cap, 1))
+    return _drive_depth_first(_dsep_task(dg, seed, cfg,
+                                         max(cfg.k_fm_cap, 1)))
 
 
-def _fallback_separator_sh(dg: DGraph) -> np.ndarray:
+def _fallback_task(dg: DGraph):
     """Validity-first fallback: gid bisection, boundary into separator.
 
     Mirrors ``nd._fallback_separator``'s role when the multilevel
@@ -751,7 +843,7 @@ def _fallback_separator_sh(dg: DGraph) -> np.ndarray:
     valid = gid >= 0
     part = np.where(gid < dg.n_global // 2, 0, 1).astype(np.int8)
     part[~valid] = 3
-    ext = np.asarray(halo_exchange_fn(dg)(part.astype(np.int32)))
+    ext = np.asarray((yield DHaloWork(dg, part.astype(np.int32))))
     p, li, sl = np.nonzero(dg.nbr_gst >= 0)
     c = dg.nbr_gst[p, li, sl].astype(np.int64)
     nbr_part = ext[p, c]
@@ -761,8 +853,8 @@ def _fallback_separator_sh(dg: DGraph) -> np.ndarray:
     return part
 
 
-def _resolve_sh(dg: DGraph, part_sh: Optional[np.ndarray],
-                cfg: DNDConfig) -> Optional[np.ndarray]:
+def _resolve_task(dg: DGraph, part_sh: Optional[np.ndarray],
+                  cfg: DNDConfig):
     """Degenerate-separator policy of the sharded recursion."""
     v = valid_mask(dg)
 
@@ -772,14 +864,14 @@ def _resolve_sh(dg: DGraph, part_sh: Optional[np.ndarray],
 
     if degenerate(part_sh):
         if dg.n_global > 4 * cfg.leaf_size:
-            part_sh = _fallback_separator_sh(dg)
+            part_sh = yield from _fallback_task(dg)
         if degenerate(part_sh):
             return None
     return part_sh
 
 
 # ------------------------------------------------------------------ #
-# distributed ND driver
+# distributed ND task tree
 # ------------------------------------------------------------------ #
 @dataclasses.dataclass
 class _Deferred:
@@ -792,6 +884,327 @@ class _Deferred:
     shard: int
 
 
+def _defer(dg: DGraph, gids_sh: np.ndarray, seed: int, nproc: int,
+           node_id: int, dord: DistOrdering,
+           deferred: List[_Deferred]) -> None:
+    """§3.1 centralization: gather a sub-threshold subtree for the batch.
+
+    The subtree is assigned (round-robin by node id) to the shard that
+    will hold its ordering fragment in the distributed tree.
+    """
+    g = to_host(dg)
+    gids = unshard_vector(dg, gids_sh)
+    deferred.append(_Deferred(g, gids, seed, nproc, node_id,
+                              node_id % dord.nparts))
+
+
+def _dnd_task(dg: DGraph, gids_sh: np.ndarray, seed: int, cfg: DNDConfig,
+              dord: DistOrdering, node_id: int,
+              deferred: List[_Deferred]):
+    """One ND tree node as a task: separator, split, spawn the children."""
+    p, n = dg.nparts, dg.n_global
+    start = dord.nodes[node_id].start
+    if p <= 1 or n <= max(cfg.centralize_threshold, cfg.leaf_size):
+        # the subtree is sequential from here; defer it so all deferred
+        # subtrees batch through the scheduler at once
+        _defer(dg, gids_sh, seed, p, node_id, dord, deferred)
+        return
+    part_sh = yield from _dsep_task(dg, seed, cfg, max(cfg.k_fm_cap, 1))
+    part_sh = yield from _resolve_task(dg, part_sh, cfg)
+    if part_sh is None:
+        _defer(dg, gids_sh, seed, 1, node_id, dord, deferred)
+        return
+    v = valid_mask(dg)
+    n0 = int(((part_sh == 0) & v).sum())
+    n1 = int(((part_sh == 1) & v).sum())
+    ns = n - n0 - n1
+    p0, p1 = child_nprocs(p)
+    s0, s1 = child_seeds(seed)
+    # distributed induced subgraphs, each redistributed onto its child
+    # process group (§3.1: part 0 onto ⌈p/2⌉ processes, part 1 onto ⌊p/2⌋)
+    dg0, (g0ids,) = dgraph_induced(dg, (part_sh == 0) & v, nparts=p0,
+                                   payloads=(gids_sh,), fills=(-1,))
+    dg1, (g1ids,) = dgraph_induced(dg, (part_sh == 1) & v, nparts=p1,
+                                   payloads=(gids_sh,), fills=(-1,))
+    c0 = dord.add_node(node_id, start, n0)
+    c1 = dord.add_node(node_id, start + n0, n1)
+
+    # separator ordered last (highest indices of the column block)
+    if ns:
+        snode = dord.add_node(node_id, start + n0 + n1, ns, "sep")
+        if ns <= max(cfg.centralize_threshold, cfg.leaf_size):
+            dgs, (sgids_sh,) = dgraph_induced(dg, (part_sh == 2) & v,
+                                              nparts=1,
+                                              payloads=(gids_sh,),
+                                              fills=(-1,))
+            gs = to_host(dgs)
+            sgids = unshard_vector(dgs, sgids_sh)
+            dord.add_fragment(snode, sgids[separator_perm(gs, seed)],
+                              node_id % dord.nparts)
+        else:
+            # huge separator: each shard keeps its local fragment,
+            # ordered by local id; offsets by the §2.2 prefix-sum exchange
+            pieces = [gids_sh[q][v[q] & (part_sh[q] == 2)]
+                      for q in range(p)]
+            dord.add_sharded_fragments(snode, pieces)
+
+    # the two sides are independent subtrees (paper §3.1): spawned as
+    # sibling tasks so the frontier driver advances them concurrently
+    yield _Spawn([_dnd_task(dg0, g0ids, s0, cfg, dord, c0, deferred),
+                  _dnd_task(dg1, g1ids, s1, cfg, dord, c1, deferred)])
+
+
+# ------------------------------------------------------------------ #
+# drivers: depth-first (oracle) and frontier (wave-batched)
+# ------------------------------------------------------------------ #
+def _execute_one(work):
+    """Singleton execution of one yielded work (the depth-first driver).
+
+    Runs exactly the program the frontier driver would run for a
+    one-lane bucket, so the two drivers stay bit-identical.
+    """
+    if isinstance(work, list):          # per-phase band fragment batch
+        with _dg.stage("fm"):
+            return execute_fm_works(work)
+    if isinstance(work, FMWork):
+        with _dg.stage("fm"):
+            return execute_fm_works([work])[0]
+    if isinstance(work, BFSWork):
+        with _dg.stage("bfs"):
+            return execute_bfs_works([work])[0]
+    if isinstance(work, MatchWork):
+        with _dg.stage("match"):
+            return execute_match_works([work])[0]
+    if isinstance(work, DMatchWork):
+        return distributed_matching_stacked([work.dg], [work.seed],
+                                            work.rounds)[0]
+    if isinstance(work, DBFSWork):
+        return distributed_bfs_stacked([work.dg], [work.src],
+                                       work.width)[0]
+    if isinstance(work, DHaloWork):
+        return halo_exchange_stacked([work.dg], [work.x])[0]
+    raise TypeError(f"unknown work kind: {type(work).__name__}")
+
+
+def _drive_depth_first(gen):
+    """Depth-first driver: the PR 2–4 recursion's execution order.
+
+    Every yielded work executes immediately as a singleton; spawned
+    subtasks run to completion in order.  One launch per device step —
+    the oracle the frontier driver is asserted bit-identical against.
+    """
+    try:
+        item = next(gen)
+        while True:
+            if isinstance(item, _Spawn):
+                res = [_drive_depth_first(sub) for sub in item.tasks]
+            else:
+                res = _execute_one(item)
+            item = gen.send(res)
+    except StopIteration as stop:
+        return stop.value
+
+
+def _work_kind(work) -> str:
+    if isinstance(work, (list, FMWork)):
+        return "fm"
+    if isinstance(work, BFSWork):
+        return "bfs"
+    if isinstance(work, MatchWork):
+        return "match"
+    if isinstance(work, DMatchWork):
+        return "dmatch"
+    if isinstance(work, DBFSWork):
+        return "dbfs"
+    if isinstance(work, DHaloWork):
+        return "dhalo"
+    raise TypeError(f"unknown work kind: {type(work).__name__}")
+
+
+def _execute_wave(works: List) -> Tuple[List, dict]:
+    """Execute one frontier wave of mixed works, bucketed + lane-stacked.
+
+    Centralized works (``FMWork`` — bare or in per-phase lists —
+    ``BFSWork``, ``MatchWork``) run through the service's bucketed
+    executors; distributed works group by ``dgraph_bucket`` (plus
+    rounds / width / dtype) and each group runs as ONE lane-stacked
+    ``shard_map`` launch.  Per-lane results are independent of wave
+    composition, so wave execution is bit-identical to singleton
+    execution.  Returns (results in input order, wave summary with
+    per-kind works / buckets / launches).
+    """
+    results: List = [None] * len(works)
+    summary: Dict[str, dict] = {"works": {}, "buckets": {},
+                                "launches": {}}
+
+    def note(kind: str, n_works: int, n_buckets: int) -> None:
+        summary["works"][kind] = summary["works"].get(kind, 0) + n_works
+        summary["buckets"][kind] = (summary["buckets"].get(kind, 0)
+                                    + n_buckets)
+
+    # --- centralized device plane: flatten FM lists, bucket by kind
+    fm_items: List[Tuple[int, Optional[int], FMWork]] = []
+    bfs_items: List[Tuple[int, BFSWork]] = []
+    mt_items: List[Tuple[int, MatchWork]] = []
+    for i, w in enumerate(works):
+        if isinstance(w, list):
+            assert all(isinstance(s, FMWork) for s in w)
+            results[i] = [None] * len(w)
+            fm_items.extend((i, j, s) for j, s in enumerate(w))
+        elif isinstance(w, FMWork):
+            fm_items.append((i, None, w))
+        elif isinstance(w, BFSWork):
+            bfs_items.append((i, w))
+        elif isinstance(w, MatchWork):
+            mt_items.append((i, w))
+
+    # the wave's launch counts are *measured*: every executor below
+    # notes its real dispatches into the active instrument blocks, and
+    # this nested block captures exactly this wave's records — so the
+    # launches == buckets budget assertions compare against what
+    # actually ran, not against the wave's own bookkeeping
+    with _dg.instrument() as wave_ins:
+        if fm_items:
+            with _dg.stage("fm"):
+                outs = execute_fm_works([w for _, _, w in fm_items])
+            for (i, j, _), r in zip(fm_items, outs):
+                if j is None:
+                    results[i] = r
+                else:
+                    results[i][j] = r
+            note("fm", len(fm_items),
+                 len({w.bucket_key() for _, _, w in fm_items}))
+        if bfs_items:
+            with _dg.stage("bfs"):
+                outs = execute_bfs_works([w for _, w in bfs_items])
+            for (i, _), r in zip(bfs_items, outs):
+                results[i] = r
+            note("bfs", len(bfs_items),
+                 len({w.bucket_key() for _, w in bfs_items}))
+        if mt_items:
+            with _dg.stage("match"):
+                outs = execute_match_works([w for _, w in mt_items])
+            for (i, _), r in zip(mt_items, outs):
+                results[i] = r
+            note("match", len(mt_items),
+                 len({w.bucket_key() for _, w in mt_items}))
+
+        # --- distributed data plane: lane-stack per bucket, ONE launch
+        groups: Dict[Tuple, List[int]] = defaultdict(list)
+        for i, w in enumerate(works):
+            if isinstance(w, DMatchWork):
+                groups[("dmatch", dgraph_bucket(w.dg), w.rounds)].append(i)
+            elif isinstance(w, DBFSWork):
+                groups[("dbfs", dgraph_bucket(w.dg), w.width)].append(i)
+            elif isinstance(w, DHaloWork):
+                groups[("dhalo", dgraph_bucket(w.dg),
+                        str(np.asarray(w.x).dtype))].append(i)
+        counts: Dict[str, List[int]] = defaultdict(list)
+        for key, idxs in groups.items():
+            kind = key[0]
+            counts[kind].append(len(idxs))
+            if kind == "dmatch":
+                outs = distributed_matching_stacked(
+                    [works[i].dg for i in idxs],
+                    [works[i].seed for i in idxs], key[2])
+            elif kind == "dbfs":
+                outs = distributed_bfs_stacked(
+                    [works[i].dg for i in idxs],
+                    [works[i].src for i in idxs], key[2])
+            else:
+                outs = halo_exchange_stacked(
+                    [works[i].dg for i in idxs],
+                    [works[i].x for i in idxs])
+            for i, r in zip(idxs, outs):
+                results[i] = r
+        for kind, ns in counts.items():
+            note(kind, sum(ns), len(ns))
+    for rec in wave_ins.launches:
+        summary["launches"][rec["kind"]] = \
+            summary["launches"].get(rec["kind"], 0) + 1
+    return results, summary
+
+
+@dataclasses.dataclass
+class _Task:
+    """Frontier bookkeeping of one live generator."""
+    gen: object
+    parent: Optional["_Task"]
+    slot: int
+    started: bool = False
+    n_pending: int = 0
+    child_results: List = dataclasses.field(default_factory=list)
+    done: bool = False
+    result: object = None
+
+
+def _advance(task: _Task, value, blocked: List[Tuple[_Task, object]]
+             ) -> None:
+    """Run a task until it blocks on device work, spawns, or finishes.
+
+    Finishing delivers the return value to the parent's result slot;
+    the parent resumes (recursively) once its last child finishes.
+    """
+    while True:
+        try:
+            if task.started:
+                item = task.gen.send(value)
+            else:
+                task.started = True
+                item = next(task.gen)
+        except StopIteration as stop:
+            task.result, task.done = stop.value, True
+            parent = task.parent
+            if parent is not None:
+                parent.child_results[task.slot] = stop.value
+                parent.n_pending -= 1
+                if parent.n_pending == 0:
+                    _advance(parent, list(parent.child_results), blocked)
+            return
+        if isinstance(item, _Spawn):
+            if not item.tasks:
+                value = []
+                continue
+            task.n_pending = len(item.tasks)
+            task.child_results = [None] * len(item.tasks)
+            for k, sub in enumerate(item.tasks):
+                _advance(_Task(sub, task, k), None, blocked)
+            return
+        blocked.append((task, item))
+        return
+
+
+def _drive_frontier(root_gen):
+    """Frontier driver: advance ALL live tasks, then execute one wave.
+
+    Each wave gathers every outstanding work of the whole task tree —
+    siblings at any depth, fold-dup duplicates, centralized instances —
+    and executes it bucketed + lane-stacked (``_execute_wave``).  Wave
+    summaries (works / buckets / launches per kind) are recorded into
+    the active ``dgraph.instrument()`` block as ``waves``, which is
+    where ``BENCH_dnd.json``'s ``launches_by_level`` and the
+    launch-budget tests read them.
+    """
+    root = _Task(root_gen, None, 0)
+    blocked: List[Tuple[_Task, object]] = []
+    _advance(root, None, blocked)
+    level = 0
+    while blocked:
+        results, summary = _execute_wave([w for _, w in blocked])
+        summary["level"] = level
+        _dg._note_wave(summary)
+        tasks = [t for t, _ in blocked]
+        blocked = []
+        for t, r in zip(tasks, results):
+            _advance(t, r, blocked)
+        level += 1
+    assert root.done
+    return root.result
+
+
+# ------------------------------------------------------------------ #
+# distributed ND entry point
+# ------------------------------------------------------------------ #
 def distributed_nested_dissection(dg: DGraph, seed: int = 0,
                                   cfg: Optional[DNDConfig] = None,
                                   return_tree: bool = False):
@@ -802,7 +1215,10 @@ def distributed_nested_dissection(dg: DGraph, seed: int = 0,
       seed: deterministic seed; the whole pipeline (matching coins, FM
         perturbations, tiebreaks) derives from it, so equal (dg, seed,
         cfg) give identical orderings.
-      cfg: DNDConfig; None uses defaults.
+      cfg: DNDConfig; None uses defaults.  ``cfg.frontier`` picks the
+        driver; both drivers return bit-identical orderings (asserted in
+        the frontier tests), the frontier one in O(buckets) launches per
+        wave instead of O(live subproblems).
       return_tree: return the ``DistOrdering`` (fragments stay sharded)
         instead of the flat permutation.
 
@@ -821,13 +1237,18 @@ def distributed_nested_dissection(dg: DGraph, seed: int = 0,
     cfg = cfg or DNDConfig()
     dord = DistOrdering(dg.n_global, dg.nparts)
     deferred: List[_Deferred] = []
-    _dnd_sh(dg, shard_gids(dg), seed, cfg, dord, DistOrdering.root,
-            deferred)
+    root = _dnd_task(dg, shard_gids(dg), seed, cfg, dord,
+                     DistOrdering.root, deferred)
+    if cfg.frontier:
+        _drive_frontier(root)
+    else:
+        _drive_depth_first(root)
     if deferred:
-        perms = order_batch([d.g for d in deferred],
-                            [d.seed for d in deferred],
-                            [d.nproc for d in deferred],
-                            [cfg] * len(deferred))
+        with _dg.stage("endgame"):
+            perms = order_batch([d.g for d in deferred],
+                                [d.seed for d in deferred],
+                                [d.nproc for d in deferred],
+                                [cfg] * len(deferred))
         for d, perm in zip(deferred, perms):
             dord.add_fragment(d.node, d.gids[perm], d.shard)
     if return_tree:
@@ -836,66 +1257,3 @@ def distributed_nested_dissection(dg: DGraph, seed: int = 0,
     assert np.array_equal(np.sort(perm), np.arange(dg.n_global)), \
         "not a permutation"
     return perm
-
-
-def _defer(dg: DGraph, gids_sh: np.ndarray, seed: int, nproc: int,
-           node_id: int, dord: DistOrdering,
-           deferred: List[_Deferred]) -> None:
-    """§3.1 centralization: gather a sub-threshold subtree for the batch.
-
-    The subtree is assigned (round-robin by node id) to the shard that
-    will hold its ordering fragment in the distributed tree.
-    """
-    g = to_host(dg)
-    gids = unshard_vector(dg, gids_sh)
-    deferred.append(_Deferred(g, gids, seed, nproc, node_id,
-                              node_id % dord.nparts))
-
-
-def _dnd_sh(dg: DGraph, gids_sh: np.ndarray, seed: int, cfg: DNDConfig,
-            dord: DistOrdering, node_id: int,
-            deferred: List[_Deferred]) -> None:
-    p, n = dg.nparts, dg.n_global
-    start = dord.nodes[node_id].start
-    if p <= 1 or n <= max(cfg.centralize_threshold, cfg.leaf_size):
-        # the subtree is sequential from here; defer it so all deferred
-        # subtrees batch through the scheduler at once
-        _defer(dg, gids_sh, seed, p, node_id, dord, deferred)
-        return
-    part_sh = _resolve_sh(dg, distributed_separator(dg, seed, cfg), cfg)
-    if part_sh is None:
-        _defer(dg, gids_sh, seed, 1, node_id, dord, deferred)
-        return
-    v = valid_mask(dg)
-    n0 = int(((part_sh == 0) & v).sum())
-    n1 = int(((part_sh == 1) & v).sum())
-    ns = n - n0 - n1
-    p0, p1 = child_nprocs(p)
-    s0, s1 = child_seeds(seed)
-    # distributed induced subgraphs, each redistributed onto its child
-    # process group (§3.1: part 0 onto ⌈p/2⌉ processes, part 1 onto ⌊p/2⌋)
-    dg0, (g0ids,) = dgraph_induced(dg, (part_sh == 0) & v, nparts=p0,
-                                   payloads=(gids_sh,), fills=(-1,))
-    dg1, (g1ids,) = dgraph_induced(dg, (part_sh == 1) & v, nparts=p1,
-                                   payloads=(gids_sh,), fills=(-1,))
-    c0 = dord.add_node(node_id, start, n0)
-    _dnd_sh(dg0, g0ids, s0, cfg, dord, c0, deferred)
-    c1 = dord.add_node(node_id, start + n0, n1)
-    _dnd_sh(dg1, g1ids, s1, cfg, dord, c1, deferred)
-
-    # separator ordered last (highest indices of the column block)
-    if ns == 0:
-        return
-    snode = dord.add_node(node_id, start + n0 + n1, ns, "sep")
-    if ns <= max(cfg.centralize_threshold, cfg.leaf_size):
-        dgs, (sgids_sh,) = dgraph_induced(dg, (part_sh == 2) & v, nparts=1,
-                                          payloads=(gids_sh,), fills=(-1,))
-        gs = to_host(dgs)
-        sgids = unshard_vector(dgs, sgids_sh)
-        dord.add_fragment(snode, sgids[separator_perm(gs, seed)],
-                          node_id % dord.nparts)
-    else:
-        # huge separator: each shard keeps its local fragment, ordered by
-        # local id; offsets by the §2.2 prefix-sum exchange
-        pieces = [gids_sh[q][v[q] & (part_sh[q] == 2)] for q in range(p)]
-        dord.add_sharded_fragments(snode, pieces)

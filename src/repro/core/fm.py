@@ -237,7 +237,7 @@ class FMWork:
 
     ``locked`` is *lane data*, not part of ``bucket_key``: works whose
     locked masks differ (e.g. the per-phase boundary-color masks of the
-    sharded-band alternating schedule, ``dnd._sharded_band_fm``) still
+    sharded-band alternating schedule, ``dnd._sharded_band_task``) still
     batch into one dispatch, because every lane's mask rides in as an
     input array of the vmapped body — only shape-affecting fields
     (padded n / d, the max_moves sub-bucket, passes, pos_only) key the
@@ -381,6 +381,9 @@ def execute_fm_works(works: Sequence[FMWork],
             jnp.asarray(lock_b), jnp.asarray(keys_b), jnp.asarray(eps_b),
             jnp.asarray(mm_b), jnp.asarray(np_b), passes=passes,
             pos_only=pos_only, gain_mode=gain_mode)
+        from repro.core.dgraph import _note_launch
+        _note_launch("fm", 0, L_real, L_pad,
+                     (n_pad, d_pad, _mm, passes, pos_only), passes, 0)
         parts = np.asarray(parts)
         sep_w = np.asarray(sep_w)
         imb = np.asarray(imb)

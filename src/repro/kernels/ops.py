@@ -32,9 +32,22 @@ def ell_relax_step(nbr: jax.Array, dist_ext: jax.Array, big) -> jax.Array:
     (``core.band``), or the halo-extended local+ghost vector in the
     distributed sweep (``core.dgraph``).  Shared so the two sweeps relax
     identically.
+
+    Lane-stacked form: ``nbr`` (L, n, d) with ``dist_ext`` (L, m) relaxes
+    every lane against its own extended vector — the per-bucket stacked
+    BFS of ``dgraph.distributed_bfs_stacked`` runs all lanes of a wave
+    through one such step per relaxation.  Reductions stay within-lane,
+    so each lane equals its 2-D singleton relaxation bit-for-bit.
     """
     valid = nbr >= 0
-    dn = jnp.where(valid, dist_ext[jnp.where(valid, nbr, 0)], big)
+    idx = jnp.where(valid, nbr, 0)
+    if nbr.ndim == 3:
+        L, n, d = nbr.shape
+        dn = jnp.take_along_axis(dist_ext, idx.reshape(L, n * d),
+                                 axis=1).reshape(L, n, d)
+        dn = jnp.where(valid, dn, big)
+    else:
+        dn = jnp.where(valid, dist_ext[idx], big)
     return jnp.min(dn, axis=-1) + 1
 
 

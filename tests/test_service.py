@@ -193,6 +193,37 @@ def test_service_end_to_end(mixed_graphs):
     assert st["queue_depth"] == 0
 
 
+def test_latency_split_queue_wait_vs_exec(mixed_graphs):
+    """Drained requests report queue wait and execution separately: the
+    end-to-end latency decomposes instead of conflating how long the
+    request sat in the drain queue with how fast the batch ran."""
+    import time
+    svc = OrderingService()
+    rid0 = svc.submit(mixed_graphs[0], seed=0, nproc=2)
+    time.sleep(0.05)                    # measurable queue wait
+    rid1 = svc.submit(mixed_graphs[1], seed=1, nproc=2)
+    svc.drain()
+    for rid in (rid0, rid1):
+        res = svc.poll(rid)
+        assert res.queue_wait_s >= 0 and res.exec_s > 0
+        # wait + shared-batch execution bound the end-to-end latency
+        assert res.latency_s >= res.queue_wait_s
+        assert res.latency_s >= res.exec_s
+    # rid0 waited through the sleep; both shared one batch execution
+    assert svc.poll(rid0).queue_wait_s >= 0.05
+    assert svc.poll(rid0).exec_s == svc.poll(rid1).exec_s
+    # a cache hit has no queue wait — its latency IS the lookup
+    rid2 = svc.submit(mixed_graphs[0], seed=0, nproc=2)
+    res2 = svc.poll(rid2)
+    assert res2.cached and res2.queue_wait_s == 0.0
+    st = svc.stats()
+    for key in ("p50_queue_wait_ms", "p95_queue_wait_ms",
+                "p50_exec_ms", "p95_exec_ms"):
+        assert key in st and st[key] >= 0
+    assert st["p95_queue_wait_ms"] >= st["p50_queue_wait_ms"]
+    assert st["p95_exec_ms"] >= st["p50_exec_ms"]
+
+
 def test_service_deterministic_across_drains(mixed_graphs):
     g = mixed_graphs[1]
     svc1 = OrderingService()
