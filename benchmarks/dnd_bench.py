@@ -78,6 +78,23 @@ def main() -> None:
     if len(jax.devices()) < max(DEVICE_COUNTS):
         _reexec_with_devices()
         return
+    # REPRO_TRACE_OUT=path captures a span trace of the whole bench run
+    # (the re-exec subprocess inherits the env, so the child writes the
+    # file); the root ``bench`` span covers the full session, which is
+    # what makes scripts/trace_summary.py report >= 95% coverage
+    trace_out = os.environ.get("REPRO_TRACE_OUT")
+    if not trace_out:
+        _bench()
+        return
+    from repro import obs
+    with obs.tracing() as tracer:
+        with tracer.span("bench", bench="dnd"):
+            _bench()
+    tracer.export_chrome(trace_out)
+    print(f"trace written to {trace_out} ({len(tracer.spans)} spans)")
+
+
+def _bench() -> None:
     import numpy as np
     from benchmarks.common import row
     from repro.core.dgraph import distribute, instrument
@@ -94,8 +111,10 @@ def main() -> None:
     ratios = []
     max_gather = 0
     stage_s = {}
+    stage_detail = {}
     match_words = 0
     budget_ok = True
+    timing_jitter = 1.0
     for name, g in graphs.items():
         perm_h = nested_dissection(g, seed=0, nproc=8)
         opc_h = nnz_opc(g, perm_h)[1]
@@ -110,17 +129,24 @@ def main() -> None:
             # amortized by the persistent cache
             reps = 2 if p in (min(DEVICE_COUNTS), max(DEVICE_COUNTS)) \
                 else 1
-            dt = None
+            samples = []
             for rep in range(reps):
                 t0 = time.perf_counter()
                 with instrument() as ins_rep:
                     perm_d = distributed_nested_dissection(dg, seed=0)
-                dt_rep = time.perf_counter() - t0
-                dt = dt_rep if dt is None else min(dt, dt_rep)
+                samples.append(time.perf_counter() - t0)
                 if rep == 0:
                     ins = ins_rep
+            dt = min(samples)
             wall[p] += dt
             entry[f"t_p{p}_s"] = round(dt, 3)
+            # raw samples stay in the artifact so the gated p8/p1 ratio
+            # is debuggable when a CI runner swings; timing_jitter is
+            # the worst max/min swing over the min-of-2 endpoints
+            entry[f"t_p{p}_samples"] = [round(s, 3) for s in samples]
+            if len(samples) > 1:
+                timing_jitter = max(timing_jitter,
+                                    max(samples) / max(min(samples), 1e-9))
             if p == max(DEVICE_COUNTS):
                 opc_d = nnz_opc(g, perm_d)[1]
                 entry["opc_dnd"] = opc_d
@@ -136,6 +162,11 @@ def main() -> None:
                 budget_ok &= entry["launch_budget_ok"]
                 for k, v in ins.stage_s.items():
                     stage_s[k] = stage_s.get(k, 0.0) + v
+                for k, d in ins.stage_detail.items():
+                    sd = stage_detail.setdefault(
+                        k, {"compile_s": 0.0, "dispatch_s": 0.0})
+                    sd["compile_s"] += d["compile_s"]
+                    sd["dispatch_s"] += d["dispatch_s"]
                 match_words += sum(l["words"] for l in ins.launches
                                    if l["kind"] == "dmatch")
         per_graph[name] = entry
@@ -179,7 +210,18 @@ def main() -> None:
         "graphs": per_graph,
         "wallclock_s": {str(p): round(wall[p], 3) for p in DEVICE_COUNTS},
         "p8_over_p1": round(p8_over_p1, 3),
-        "stage_s": {k: round(v, 3) for k, v in sorted(stage_s.items())},
+        "timing_jitter": round(timing_jitter, 3),
+        # every stage decomposed into first-call compile (trace + lower
+        # + XLA compile or persistent-cache load) vs steady-state
+        # dispatch, split by jit-cache-key first use (DESIGN.md §6);
+        # per-wave rollups (t_s + stage_s per frontier wave) live in
+        # graphs.*.launches_by_level
+        "stage_s": {k: {"total_s": round(v, 3),
+                        "compile_s": round(stage_detail.get(
+                            k, {}).get("compile_s", 0.0), 3),
+                        "dispatch_s": round(stage_detail.get(
+                            k, {}).get("dispatch_s", 0.0), 3)}
+                    for k, v in sorted(stage_s.items())},
         "launch_budget_ok": budget_ok,
         "match_gather_words": match_words,
         "opc_ratio_mean": round(ratio_mean, 4),

@@ -128,6 +128,10 @@ def main() -> None:
         "p95_queue_wait_ms": stats["p95_queue_wait_ms"],
         "p50_exec_ms": stats["p50_exec_ms"],
         "p95_exec_ms": stats["p95_exec_ms"],
+        # per-size-class exec percentiles (xs/s/m/l, see api.size_class):
+        # the SLO-queue work needs p95 attribution by request size, not
+        # one pooled percentile dominated by the biggest graphs
+        "exec_ms_by_class": stats["by_class"],
         "opc": {k: float(v) for k, v in opc.items()},
         "quick": quick(),
     }

@@ -101,14 +101,24 @@ def execute_bfs_works(works: Sequence[BFSWork],
             n, d = works[i].nbr.shape
             nbr_b[j, :n, :d] = works[i].nbr
             src_b[j, :n] = works[i].src
-        tile_bytes = 4 * n_pad * (d_pad + 2)    # ELL tile + dist + src
-        if mode == "pallas" and tile_bytes <= _BFS_VMEM_BUDGET_BYTES:
-            from repro.kernels.ops import band_bfs_batch
-            dist = np.asarray(band_bfs_batch(nbr_b, src_b, width))
-        else:
-            dist = np.asarray(bfs_distance_multi(
-                jnp.asarray(nbr_b), jnp.asarray(src_b), width))
+        from repro import obs
         from repro.core.dgraph import _note_launch
+        tile_bytes = 4 * n_pad * (d_pad + 2)    # ELL tile + dist + src
+        use_pallas = (mode == "pallas"
+                      and tile_bytes <= _BFS_VMEM_BUDGET_BYTES)
+
+        def dispatch():
+            if use_pallas:
+                from repro.kernels.ops import band_bfs_batch
+                return np.asarray(band_bfs_batch(nbr_b, src_b, width))
+            return np.asarray(bfs_distance_multi(
+                jnp.asarray(nbr_b), jnp.asarray(src_b), width))
+
+        path = "pallas" if use_pallas else "xla"
+        dist = obs.timed_dispatch(
+            "bfs", "bfs", ("bfs", path, n_pad, d_pad, width, L),
+            dispatch, lanes=L, lanes_pad=L, bucket=(n_pad, d_pad),
+            width=width, path=path)
         _note_launch("bfs", 0, L, L, (n_pad, d_pad), width, 0)
         for j, i in enumerate(idxs):
             results[i] = dist[j, :works[i].nbr.shape[0]]

@@ -104,8 +104,13 @@ def execute_match_works(works: Sequence[MatchWork]) -> List[np.ndarray]:
             n, d = works[i].nbr.shape
             nbr_b[j, :n, :d] = works[i].nbr
             wgt_b[j, :n, :d] = works[i].wgt
-        m = np.asarray(match_batch(nbr_b, wgt_b, keys, rounds=rounds))
+        from repro import obs
         from repro.core.dgraph import _note_launch
+        m = obs.timed_dispatch(
+            "match", "match", ("match", n_pad, d_pad, rounds, L),
+            lambda: np.asarray(match_batch(nbr_b, wgt_b, keys,
+                                           rounds=rounds)),
+            lanes=L, lanes_pad=L, bucket=(n_pad, d_pad), rounds=rounds)
         _note_launch("match", 0, L, L, (n_pad, d_pad), rounds, 0)
         for j, i in enumerate(idxs):
             n = works[i].nbr.shape[0]

@@ -70,6 +70,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import obs
 from repro.core.graph import Graph
 from repro.core.matching import hash_mix, hash_unit
 from repro.util import pow2
@@ -254,10 +255,19 @@ class Instrumentation:                # with equal contents must not alias
       ``dnd``'s band task; see ``dnd.track_band_stats``).
     ``stage_s``   — accumulated wall-clock seconds per pipeline stage
       (``match`` / ``bfs`` / ``halo`` / ``fm`` / ``rebuild`` /
-      ``endgame``).
+      ``endgame``).  Stages are attribution *categories*, not disjoint
+      intervals: ``endgame`` times the whole deferred-subtree batch and
+      therefore contains the ``fm`` / ``bfs`` / ``match`` shares its
+      executors bill.
+    ``stage_detail`` — per stage, the compile/dispatch split:
+      ``{stage: {"compile_s", "dispatch_s"}}``.  A dispatch whose jit
+      cache key (mirroring the builder's ``lru_cache`` key) is seen for
+      the first time bills its whole wall to ``compile_s`` (trace +
+      lower + XLA compile, or a persistent-cache load); steady-state
+      repeats bill ``dispatch_s``.
     ``waves``     — one summary dict per frontier wave (appended by the
-      frontier driver): outstanding works / shape buckets / launches by
-      work kind.
+      frontier driver): outstanding works / shape buckets / launches /
+      wall-clock (``t_s``) / per-stage seconds (``stage_s``) by kind.
     """
     gathers: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
     halos: List[int] = dataclasses.field(default_factory=list)
@@ -265,9 +275,29 @@ class Instrumentation:                # with equal contents must not alias
     band_stats: List[dict] = dataclasses.field(default_factory=list)
     stage_s: Dict[str, float] = dataclasses.field(default_factory=dict)
     waves: List[dict] = dataclasses.field(default_factory=list)
+    stage_detail: Dict[str, Dict[str, float]] = \
+        dataclasses.field(default_factory=dict)
 
-
-_ACTIVE: List[Instrumentation] = []
+    def on_event(self, kind: str, payload: dict) -> None:
+        """Event-bus entry point (called with the bus lock held, so the
+        read-modify-write ``stage_s`` accumulation is atomic under
+        concurrent emitters)."""
+        if kind == "gather":
+            self.gathers.append((payload["kind"], payload["n"]))
+        elif kind == "halo":
+            self.halos.append(payload["n"])
+        elif kind == "launch":
+            self.launches.append(payload)      # the shared launch record
+        elif kind == "band_stats":
+            self.band_stats.append(payload)
+        elif kind == "stage":
+            name, sec = payload["name"], float(payload["seconds"])
+            self.stage_s[name] = self.stage_s.get(name, 0.0) + sec
+            d = self.stage_detail.setdefault(
+                name, {"compile_s": 0.0, "dispatch_s": 0.0})
+            d["compile_s" if payload.get("compile") else "dispatch_s"] += sec
+        elif kind == "wave":
+            self.waves.append(payload)         # the shared wave summary
 
 
 @contextlib.contextmanager
@@ -277,18 +307,17 @@ def instrument():
     Yields an ``Instrumentation``.  Blocks nest: every active block
     receives every event (so a ``track_halos()`` view inside a broader
     ``instrument()`` sees the same exchanges the outer block does).
+    Registration lives on the ``repro.obs`` event bus, whose lock makes
+    concurrent emitters (a service drain thread under a caller-thread
+    reader) safe; removal is **by identity** so nested blocks with equal
+    contents never evict each other.
     """
     ins = Instrumentation()
-    _ACTIVE.append(ins)
+    obs.register_collector(ins)
     try:
         yield ins
     finally:
-        # remove by identity: list.remove would use __eq__ and could
-        # evict an outer block whose recorded contents happen to match
-        for k in range(len(_ACTIVE) - 1, -1, -1):
-            if _ACTIVE[k] is ins:
-                del _ACTIVE[k]
-                break
+        obs.unregister_collector(ins)
 
 
 @contextlib.contextmanager
@@ -306,49 +335,46 @@ def track_halos():
 
 
 def _note_gather(kind: str, size: int) -> None:
-    for ins in _ACTIVE:
-        ins.gathers.append((kind, int(size)))
+    obs.emit("gather", {"kind": kind, "n": int(size)})
 
 
 def _note_halo(size: int) -> None:
-    for ins in _ACTIVE:
-        ins.halos.append(int(size))
+    obs.emit("halo", {"n": int(size)})
 
 
 def _note_launch(kind: str, nparts: int, lanes: int, lanes_pad: int,
                  bucket: Tuple[int, ...], rounds: int, words: int) -> None:
-    if not _ACTIVE:
-        return
-    rec = {"kind": kind, "nparts": int(nparts), "lanes": int(lanes),
-           "lanes_pad": int(lanes_pad), "bucket": tuple(bucket),
-           "rounds": int(rounds), "words": int(words)}
-    for ins in _ACTIVE:
-        ins.launches.append(rec)
+    obs.emit("launch", {"kind": kind, "nparts": int(nparts),
+                        "lanes": int(lanes), "lanes_pad": int(lanes_pad),
+                        "bucket": tuple(bucket), "rounds": int(rounds),
+                        "words": int(words)})
 
 
 def _note_band_stats(stats: dict) -> None:
-    for ins in _ACTIVE:
-        ins.band_stats.append(stats)
+    obs.emit("band_stats", stats)
 
 
-def _note_stage(name: str, seconds: float) -> None:
-    for ins in _ACTIVE:
-        ins.stage_s[name] = ins.stage_s.get(name, 0.0) + float(seconds)
+def _note_stage(name: str, seconds: float, compile: bool = False) -> None:
+    obs.emit("stage", {"name": name, "seconds": float(seconds),
+                       "compile": compile})
 
 
 def _note_wave(summary: dict) -> None:
-    for ins in _ACTIVE:
-        ins.waves.append(summary)
+    obs.emit("wave", summary)
 
 
 @contextlib.contextmanager
 def stage(name: str):
-    """Time a pipeline stage into every active ``instrument()`` block."""
+    """Time a pipeline stage into every active ``instrument()`` block,
+    and open a ``stage:{name}`` span when tracing is enabled (host-side
+    stages — ``rebuild``, ``endgame`` — get their trace attribution
+    here; device dispatches use ``obs.timed_dispatch`` instead)."""
     t0 = time.perf_counter()
-    try:
-        yield
-    finally:
-        _note_stage(name, time.perf_counter() - t0)
+    with obs.span(f"stage:{name}"):
+        try:
+            yield
+        finally:
+            _note_stage(name, time.perf_counter() - t0)
 
 
 # ------------------------------------------------------------------ #
@@ -757,9 +783,12 @@ def halo_exchange_stacked(dgs: Sequence[DGraph],
     gid_st, _ = _lane_pad([d.ghost_gid.astype(np.int32) for d in dgs])
     vtx_st, _ = _lane_pad([d.vtxdist.astype(np.int32) for d in dgs])
     fn = _halo_stack_jit(nparts, nlm, G, x_st.shape[0], str(x_st.dtype))
-    with stage("halo"):
-        out = np.asarray(fn(jnp.asarray(x_st), jnp.asarray(gid_st),
-                            jnp.asarray(vtx_st)))
+    out = obs.timed_dispatch(
+        "halo", "dhalo",
+        ("dhalo", nparts, nlm, G, x_st.shape[0], str(x_st.dtype)),
+        lambda: np.asarray(fn(jnp.asarray(x_st), jnp.asarray(gid_st),
+                              jnp.asarray(vtx_st))),
+        lanes=L, lanes_pad=x_st.shape[0], bucket=key)
     _note_launch("dhalo", nparts, L, x_st.shape[0], key[1:], 1,
                  x_st.shape[0] * nparts * nlm)
     for _ in range(L):                   # per-work sync budget (see doc)
@@ -843,9 +872,12 @@ def distributed_bfs_stacked(dgs: Sequence[DGraph],
     gid_st, _ = _lane_pad([d.ghost_gid.astype(np.int32) for d in dgs])
     vtx_st, _ = _lane_pad([d.vtxdist.astype(np.int32) for d in dgs])
     fn = _bfs_stack_jit(nparts, nlm, dmax, G, width, nbr_st.shape[0])
-    with stage("bfs"):
-        dist = np.asarray(fn(jnp.asarray(nbr_st), jnp.asarray(src_st),
-                             jnp.asarray(gid_st), jnp.asarray(vtx_st)))
+    dist = obs.timed_dispatch(
+        "bfs", "dbfs",
+        ("dbfs", nparts, nlm, dmax, G, width, nbr_st.shape[0]),
+        lambda: np.asarray(fn(jnp.asarray(nbr_st), jnp.asarray(src_st),
+                              jnp.asarray(gid_st), jnp.asarray(vtx_st))),
+        lanes=L, lanes_pad=nbr_st.shape[0], bucket=key, width=width)
     _note_launch("dbfs", nparts, L, nbr_st.shape[0], key[1:], width,
                  width * nbr_st.shape[0] * nparts * nlm)
     return [dist[i] for i in range(L)]
@@ -997,10 +1029,13 @@ def distributed_matching_stacked(dgs: Sequence[DGraph],
     nloc_st, _ = _lane_pad([d.n_loc.astype(np.int32) for d in dgs])
     seed_st, _ = _lane_pad([np.int32(s & 0x7FFFFFFF) for s in seeds])
     fn = _matching_stack_jit(nparts, nlm, dmax, G, rounds, nbr_st.shape[0])
-    with stage("match"):
-        m = np.asarray(fn(jnp.asarray(nbr_st), jnp.asarray(ew_st),
-                          jnp.asarray(gid_st), jnp.asarray(vtx_st),
-                          jnp.asarray(nloc_st), jnp.asarray(seed_st)))
+    m = obs.timed_dispatch(
+        "match", "dmatch",
+        ("dmatch", nparts, nlm, dmax, G, rounds, nbr_st.shape[0]),
+        lambda: np.asarray(fn(jnp.asarray(nbr_st), jnp.asarray(ew_st),
+                              jnp.asarray(gid_st), jnp.asarray(vtx_st),
+                              jnp.asarray(nloc_st), jnp.asarray(seed_st))),
+        lanes=L, lanes_pad=nbr_st.shape[0], bucket=key, rounds=rounds)
     # per round: unmatched-mask halo + proposal targets + proposal
     # weights; the grant gather-back of the pre-frontier protocol is gone
     _note_launch("dmatch", nparts, L, nbr_st.shape[0], key[1:], rounds,

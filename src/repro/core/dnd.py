@@ -72,11 +72,13 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from collections import defaultdict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core import dgraph as _dg
 from repro.core.band import BFSWork, band_graph_with_anchors, \
     execute_bfs_works
@@ -964,17 +966,13 @@ def _execute_one(work):
     one-lane bucket, so the two drivers stay bit-identical.
     """
     if isinstance(work, list):          # per-phase band fragment batch
-        with _dg.stage("fm"):
-            return execute_fm_works(work)
+        return execute_fm_works(work)
     if isinstance(work, FMWork):
-        with _dg.stage("fm"):
-            return execute_fm_works([work])[0]
+        return execute_fm_works([work])[0]
     if isinstance(work, BFSWork):
-        with _dg.stage("bfs"):
-            return execute_bfs_works([work])[0]
+        return execute_bfs_works([work])[0]
     if isinstance(work, MatchWork):
-        with _dg.stage("match"):
-            return execute_match_works([work])[0]
+        return execute_match_works([work])[0]
     if isinstance(work, DMatchWork):
         return distributed_matching_stacked([work.dg], [work.seed],
                                             work.rounds)[0]
@@ -1021,7 +1019,8 @@ def _work_kind(work) -> str:
     raise TypeError(f"unknown work kind: {type(work).__name__}")
 
 
-def _execute_wave(works: List) -> Tuple[List, dict]:
+def _execute_wave(works: List, level: Optional[int] = None
+                  ) -> Tuple[List, dict]:
     """Execute one frontier wave of mixed works, bucketed + lane-stacked.
 
     Centralized works (``FMWork`` — bare or in per-phase lists —
@@ -1031,11 +1030,15 @@ def _execute_wave(works: List) -> Tuple[List, dict]:
     ``shard_map`` launch.  Per-lane results are independent of wave
     composition, so wave execution is bit-identical to singleton
     execution.  Returns (results in input order, wave summary with
-    per-kind works / buckets / launches).
+    per-kind works / buckets / launches plus the wave's wall-clock
+    ``t_s`` and per-stage ``stage_s`` rollup).  When tracing is enabled
+    the wave runs under a ``wave`` span whose children are the bucket
+    dispatch spans.
     """
     results: List = [None] * len(works)
     summary: Dict[str, dict] = {"works": {}, "buckets": {},
                                 "launches": {}}
+    t_wave = time.perf_counter()
 
     def note(kind: str, n_works: int, n_buckets: int) -> None:
         summary["works"][kind] = summary["works"].get(kind, 0) + n_works
@@ -1063,10 +1066,10 @@ def _execute_wave(works: List) -> Tuple[List, dict]:
     # this nested block captures exactly this wave's records — so the
     # launches == buckets budget assertions compare against what
     # actually ran, not against the wave's own bookkeeping
-    with _dg.instrument() as wave_ins:
+    with _dg.instrument() as wave_ins, \
+            obs.span("wave", level=level, works=len(works)):
         if fm_items:
-            with _dg.stage("fm"):
-                outs = execute_fm_works([w for _, _, w in fm_items])
+            outs = execute_fm_works([w for _, _, w in fm_items])
             for (i, j, _), r in zip(fm_items, outs):
                 if j is None:
                     results[i] = r
@@ -1075,15 +1078,13 @@ def _execute_wave(works: List) -> Tuple[List, dict]:
             note("fm", len(fm_items),
                  len({w.bucket_key() for _, _, w in fm_items}))
         if bfs_items:
-            with _dg.stage("bfs"):
-                outs = execute_bfs_works([w for _, w in bfs_items])
+            outs = execute_bfs_works([w for _, w in bfs_items])
             for (i, _), r in zip(bfs_items, outs):
                 results[i] = r
             note("bfs", len(bfs_items),
                  len({w.bucket_key() for _, w in bfs_items}))
         if mt_items:
-            with _dg.stage("match"):
-                outs = execute_match_works([w for _, w in mt_items])
+            outs = execute_match_works([w for _, w in mt_items])
             for (i, _), r in zip(mt_items, outs):
                 results[i] = r
             note("match", len(mt_items),
@@ -1122,6 +1123,12 @@ def _execute_wave(works: List) -> Tuple[List, dict]:
     for rec in wave_ins.launches:
         summary["launches"][rec["kind"]] = \
             summary["launches"].get(rec["kind"], 0) + 1
+    # per-wave rollups: the wave's wall-clock and its per-stage share
+    # (BENCH_dnd.json aggregates these into ``waves`` alongside the
+    # existing launch budgets)
+    summary["t_s"] = time.perf_counter() - t_wave
+    summary["stage_s"] = {k: round(v, 6)
+                          for k, v in wave_ins.stage_s.items()}
     return results, summary
 
 
@@ -1190,7 +1197,8 @@ def _drive_frontier(root_gen):
     _advance(root, None, blocked)
     level = 0
     while blocked:
-        results, summary = _execute_wave([w for _, w in blocked])
+        results, summary = _execute_wave([w for _, w in blocked],
+                                         level=level)
         summary["level"] = level
         _dg._note_wave(summary)
         tasks = [t for t, _ in blocked]
@@ -1239,18 +1247,20 @@ def distributed_nested_dissection(dg: DGraph, seed: int = 0,
     deferred: List[_Deferred] = []
     root = _dnd_task(dg, shard_gids(dg), seed, cfg, dord,
                      DistOrdering.root, deferred)
-    if cfg.frontier:
-        _drive_frontier(root)
-    else:
-        _drive_depth_first(root)
-    if deferred:
-        with _dg.stage("endgame"):
-            perms = order_batch([d.g for d in deferred],
-                                [d.seed for d in deferred],
-                                [d.nproc for d in deferred],
-                                [cfg] * len(deferred))
-        for d, perm in zip(deferred, perms):
-            dord.add_fragment(d.node, d.gids[perm], d.shard)
+    with obs.span("dnd", n=dg.n_global, nparts=dg.nparts, seed=seed,
+                  driver="frontier" if cfg.frontier else "dfs"):
+        if cfg.frontier:
+            _drive_frontier(root)
+        else:
+            _drive_depth_first(root)
+        if deferred:
+            with _dg.stage("endgame"):
+                perms = order_batch([d.g for d in deferred],
+                                    [d.seed for d in deferred],
+                                    [d.nproc for d in deferred],
+                                    [cfg] * len(deferred))
+            for d, perm in zip(deferred, perms):
+                dord.add_fragment(d.node, d.gids[perm], d.shard)
     if return_tree:
         return dord
     perm = dord.assemble()

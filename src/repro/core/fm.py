@@ -376,17 +376,24 @@ def execute_fm_works(works: Sequence[FMWork],
         eps_b = cat(lambda ln: ln.eps, True)
         mm_b = cat(lambda ln: ln.max_moves, False)  # dummies: 0 moves
         np_b = cat(lambda ln: ln.n_pert, True)
-        parts, sep_w, imb = fm_refine_multi(
-            jnp.asarray(nbr_b), jnp.asarray(vw_b), jnp.asarray(parts_b),
-            jnp.asarray(lock_b), jnp.asarray(keys_b), jnp.asarray(eps_b),
-            jnp.asarray(mm_b), jnp.asarray(np_b), passes=passes,
-            pos_only=pos_only, gain_mode=gain_mode)
+        from repro import obs
         from repro.core.dgraph import _note_launch
+
+        def dispatch():
+            parts, sep_w, imb = fm_refine_multi(
+                jnp.asarray(nbr_b), jnp.asarray(vw_b), jnp.asarray(parts_b),
+                jnp.asarray(lock_b), jnp.asarray(keys_b), jnp.asarray(eps_b),
+                jnp.asarray(mm_b), jnp.asarray(np_b), passes=passes,
+                pos_only=pos_only, gain_mode=gain_mode)
+            return np.asarray(parts), np.asarray(sep_w), np.asarray(imb)
+
+        parts, sep_w, imb = obs.timed_dispatch(
+            "fm", "fm",
+            ("fm", n_pad, d_pad, _mm, passes, pos_only, gain_mode, L_pad),
+            dispatch, lanes=L_real, lanes_pad=L_pad,
+            bucket=(n_pad, d_pad, _mm, passes, pos_only))
         _note_launch("fm", 0, L_real, L_pad,
                      (n_pad, d_pad, _mm, passes, pos_only), passes, 0)
-        parts = np.asarray(parts)
-        sep_w = np.asarray(sep_w)
-        imb = np.asarray(imb)
         off = 0
         for i, k in zip(idxs, counts):
             n = works[i].nbr.shape[0]

@@ -1,0 +1,23 @@
+"""Unified observability: span tracing, event bus, metrics (DESIGN.md §6).
+
+Layering contract: ``repro.obs`` imports nothing from ``repro.core`` or
+``repro.service`` — every layer above threads its events *down* into
+this package (``dgraph.instrument()`` and its compat views are windows
+over the same bus).
+"""
+from repro.obs.metrics import REGISTRY, MetricsCollector, Registry
+from repro.obs.tracer import (Span, Tracer, current, emit, enabled,
+                              first_use, load_chrome, register_collector,
+                              reset_seen_keys, span, timed_dispatch,
+                              tracing, unregister_collector)
+
+# the default registry listens to every event for the life of the process
+_METRICS = MetricsCollector(REGISTRY)
+register_collector(_METRICS)
+
+__all__ = [
+    "REGISTRY", "MetricsCollector", "Registry", "Span", "Tracer",
+    "current", "emit", "enabled", "first_use", "load_chrome",
+    "register_collector", "reset_seen_keys", "span", "timed_dispatch",
+    "tracing", "unregister_collector",
+]

@@ -25,17 +25,32 @@ call runs everything on the local device set.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import OrderedDict, deque
 from typing import Dict, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.core.graph import Graph
 from repro.core.nd import NDConfig
 from repro.service.cache import FingerprintCache
 from repro.service.fingerprint import request_fingerprint
 from repro.service.scheduler import order_batch
+
+#: size-class boundaries (vertex count → class label); the classes key
+#: the per-class latency percentiles of ``stats()["by_class"]`` and
+#: BENCH_service.json's ``exec_ms_by_class``
+_SIZE_CLASSES = ((256, "xs"), (1024, "s"), (8192, "m"))
+
+
+def size_class(n: int) -> str:
+    """Bucket a graph size into the service's latency size classes."""
+    for bound, label in _SIZE_CLASSES:
+        if n < bound:
+            return label
+    return "l"
 
 
 @dataclasses.dataclass
@@ -47,6 +62,7 @@ class OrderResult:
     queue_wait_s: float             # submit → drain start (0 on cache hits)
     exec_s: float                   # batched-execution share of the latency
     fingerprint: str
+    size_class: str = ""            # see ``size_class()``
 
 
 @dataclasses.dataclass
@@ -84,10 +100,17 @@ class OrderingService:
         # p95_latency_ms of BENCH_service.json)
         self._queue_waits: deque = deque(maxlen=latency_window)
         self._execs: deque = deque(maxlen=latency_window)
+        self._execs_by_class: Dict[str, deque] = {}
+        self._latency_window = latency_window
         self._n_submitted = 0
         self._n_computed = 0
         self._drain_time_s = 0.0
         self._n_drained = 0
+        # submit / poll / stats run on the caller's thread while drain
+        # may run on a worker: every mutation of the queues, result map
+        # and latency deques happens under this lock.  RLock because the
+        # submit cache-hit path resolves inline while already holding it.
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------------------ #
     def submit(self, g: Graph, seed: int = 0, nproc: int = 1,
@@ -98,25 +121,32 @@ class OrderingService:
         at the next ``drain``.
         """
         cfg = cfg or self.default_cfg
-        rid = self._next_rid
-        self._next_rid += 1
-        self._n_submitted += 1
         t0 = time.perf_counter()
-        fp = request_fingerprint(g, seed, nproc, cfg)
-        perm = self.cache.get(fp)
-        if perm is not None:
-            self._resolve(rid, perm, True, t0, fp, queue_wait=0.0)
+        fp = request_fingerprint(g, seed, nproc, cfg)   # pure: no lock
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._n_submitted += 1
+            perm = self.cache.get(fp)
+            if perm is not None:
+                obs.REGISTRY.inc("repro_service_requests_total",
+                                 result="hit")
+                self._resolve(rid, perm, True, t0, fp, queue_wait=0.0,
+                              n=g.n)
+                return rid
+            obs.REGISTRY.inc("repro_service_requests_total", result="miss")
+            req = _PendingReq(rid, t0, g, seed, nproc, cfg)
+            self._pending.setdefault(fp, []).append(req)
             return rid
-        req = _PendingReq(rid, t0, g, seed, nproc, cfg)
-        self._pending.setdefault(fp, []).append(req)
-        return rid
 
     def poll(self, rid: int) -> Optional[OrderResult]:
         """Result for a request id, or None while still queued."""
-        return self._results.get(rid)
+        with self._lock:
+            return self._results.get(rid)
 
     def queue_depth(self) -> int:
-        return sum(len(v) for v in self._pending.values())
+        with self._lock:
+            return sum(len(v) for v in self._pending.values())
 
     # ------------------------------------------------------------------ #
     def drain(self) -> Dict[int, OrderResult]:
@@ -124,32 +154,38 @@ class OrderingService:
 
         Duplicate fingerprints are computed once and fanned out.  Returns
         {request_id: OrderResult} for the requests resolved by this call.
+        The batched execution itself runs *outside* the service lock, so
+        submits on other threads stay responsive during a drain (they
+        queue for the next one).
         """
-        if not self._pending:
-            return {}
-        pending, self._pending = self._pending, {}
+        with self._lock:
+            if not self._pending:
+                return {}
+            pending, self._pending = self._pending, {}
         fps = list(pending)
         heads = [pending[fp][0] for fp in fps]
         t0 = time.perf_counter()
-        perms = order_batch([r.graph for r in heads],
-                            [r.seed for r in heads],
-                            [r.nproc for r in heads],
-                            [r.cfg for r in heads])
+        with obs.span("drain", batches=len(fps)):
+            perms = order_batch([r.graph for r in heads],
+                                [r.seed for r in heads],
+                                [r.nproc for r in heads],
+                                [r.cfg for r in heads])
         dt = time.perf_counter() - t0
         resolved: Dict[int, OrderResult] = {}
         n_resolved = 0
-        for fp, perm in zip(fps, perms):
-            self.cache.put(fp, perm)
-            for k, req in enumerate(pending[fp]):
-                res = self._resolve(req.request_id, perm, k > 0,
-                                    req.t_submit, fp,
-                                    queue_wait=t0 - req.t_submit,
-                                    exec_s=dt)
-                resolved[req.request_id] = res
-                n_resolved += 1
-        self._n_computed += len(fps)
-        self._drain_time_s += dt
-        self._n_drained += n_resolved
+        with self._lock:
+            for fp, perm, head in zip(fps, perms, heads):
+                self.cache.put(fp, perm)
+                for k, req in enumerate(pending[fp]):
+                    res = self._resolve(req.request_id, perm, k > 0,
+                                        req.t_submit, fp,
+                                        queue_wait=t0 - req.t_submit,
+                                        exec_s=dt, n=head.graph.n)
+                    resolved[req.request_id] = res
+                    n_resolved += 1
+            self._n_computed += len(fps)
+            self._drain_time_s += dt
+            self._n_drained += n_resolved
         return resolved
 
     # ------------------------------------------------------------------ #
@@ -171,34 +207,63 @@ class OrderingService:
                 f"p95_{suffix}_ms":
                     round(float(np.percentile(arr, 95)) * 1e3, 3),
             }
-        return {
-            "requests": self._n_submitted,
-            "computed": self._n_computed,
-            "cache_hits": self.cache.hits,
-            "cache_hit_rate": round(self.cache.hit_rate, 4),
-            "cache_size": len(self.cache),
-            "queue_depth": self.queue_depth(),
-            **pcts(self._latencies, "latency"),
-            **pcts(self._queue_waits, "queue_wait"),
-            **pcts(self._execs, "exec"),
-            "orderings_per_sec": round(
-                self._n_drained / self._drain_time_s, 3)
-                if self._drain_time_s else 0.0,
-        }
+        with self._lock:
+            by_class = {
+                cls: {"count": len(vals), **pcts(vals, "exec")}
+                for cls, vals in sorted(self._execs_by_class.items())}
+            return {
+                "requests": self._n_submitted,
+                "computed": self._n_computed,
+                "cache_hits": self.cache.hits,
+                "cache_hit_rate": round(self.cache.hit_rate, 4),
+                "cache_size": len(self.cache),
+                "queue_depth": sum(len(v)
+                                   for v in self._pending.values()),
+                **pcts(self._latencies, "latency"),
+                **pcts(self._queue_waits, "queue_wait"),
+                **pcts(self._execs, "exec"),
+                "by_class": by_class,
+                "orderings_per_sec": round(
+                    self._n_drained / self._drain_time_s, 3)
+                    if self._drain_time_s else 0.0,
+            }
 
     # ------------------------------------------------------------------ #
     def _resolve(self, rid: int, perm: np.ndarray, cached: bool,
                  t_submit: float, fp: str, queue_wait: float = 0.0,
-                 exec_s: Optional[float] = None) -> OrderResult:
-        lat = time.perf_counter() - t_submit
+                 exec_s: Optional[float] = None,
+                 n: Optional[int] = None) -> OrderResult:
+        t_now = time.perf_counter()
+        lat = t_now - t_submit
         if exec_s is None:              # cache hit: the lookup IS the work
             exec_s = lat
+        cls = size_class(n) if n is not None else ""
         res = OrderResult(rid, perm, cached, lat, float(queue_wait),
-                          float(exec_s), fp)
+                          float(exec_s), fp, cls)
         self._results[rid] = res
         while len(self._results) > self._result_capacity:
             self._results.popitem(last=False)
         self._latencies.append(lat)
         self._queue_waits.append(float(queue_wait))
         self._execs.append(float(exec_s))
+        if cls:
+            self._execs_by_class.setdefault(
+                cls, deque(maxlen=self._latency_window)).append(
+                    float(exec_s))
+            obs.REGISTRY.observe("repro_service_exec_seconds",
+                                 float(exec_s), size_class=cls)
+        tracer = obs.current()
+        if tracer is not None:
+            # retrospective request span tree: the latency breakdown is
+            # only known at resolve time (queue_wait then exec)
+            root = tracer.add_span(
+                "request", t_submit, t_now,
+                attrs={"rid": rid, "fingerprint": fp[:16],
+                       "size_class": cls, "cached": cached})
+            if queue_wait > 0.0:
+                tracer.add_span("queue_wait", t_submit,
+                                t_submit + queue_wait,
+                                parent_id=root.span_id)
+            tracer.add_span("exec", t_now - float(exec_s), t_now,
+                            parent_id=root.span_id)
         return res

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Sequence
 
+from repro import obs
 from repro.core.band import BFSWork, execute_bfs_works
 from repro.core.coarsen import MatchWork, execute_match_works
 from repro.core.fm import FMWork, execute_fm_works
@@ -57,7 +58,8 @@ def drive_tasks(generators: Sequence) -> List[object]:
             results[i] = stop.value
     while pending:
         idxs = sorted(pending)
-        outs = run_works([pending[i] for i in idxs])
+        with obs.span("sched:round", works=len(idxs)):
+            outs = run_works([pending[i] for i in idxs])
         nxt: Dict[int, object] = {}
         for i, res in zip(idxs, outs):
             try:

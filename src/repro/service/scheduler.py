@@ -73,11 +73,13 @@ def order_batch(graphs: Sequence[Graph],
     cfgs = _as_list(cfgs or NDConfig(), n_req)
     orderings = [Ordering(g.n) for g in graphs]
 
+    from repro import obs
     frontier: List[_Node] = [
         _Node(i, g, np.arange(g.n, dtype=np.int64), seeds[i], nprocs[i],
               orderings[i].root, 0)
         for i, g in enumerate(graphs)]
 
+    depth = 0
     while frontier:
         splitters: List[_Node] = []
         # --- host-plane wave: leaves and component splits (cheap, serial)
@@ -109,7 +111,9 @@ def order_batch(graphs: Sequence[Graph],
                                effective_nproc(t.g.n, t.nproc, cfgs[t.req]),
                                cfgs[t.req])
                 for t in splitters]
-        parts = drive_tasks(gens)
+        with obs.span("sched:level", depth=depth, splitters=len(gens)):
+            parts = drive_tasks(gens)
+        depth += 1
 
         # --- split into the next depth's frontier
         nxt: List[_Node] = []

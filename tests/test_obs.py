@@ -1,0 +1,305 @@
+"""Observability subsystem: span-tree well-formedness, chrome-export
+round-trip, tracing-on/off bit-parity (host scheduler path inline;
+frontier + DFS distributed drivers in a subprocess with virtual
+devices), the disabled-overhead budget, metrics registry, and the
+trace_summary coverage contract."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import numpy as np
+
+from repro import obs
+
+
+# ------------------------------------------------------------------ #
+# span tree
+# ------------------------------------------------------------------ #
+def _tree_check(spans):
+    by_id = {s.span_id: s for s in spans}
+    assert len(by_id) == len(spans), "duplicate span ids"
+    for s in spans:
+        assert s.t1 is not None and s.t1 >= s.t0, f"span {s.name} open"
+        if s.parent_id is not None:
+            assert s.parent_id in by_id, f"orphan span {s.name}"
+            p = by_id[s.parent_id]
+            # proper nesting: the child interval sits inside the parent
+            assert p.t0 <= s.t0 + 1e-9 and s.t1 <= p.t1 + 1e-9, \
+                f"{s.name} escapes parent {p.name}"
+
+
+def test_span_tree_well_formed_nested_and_threaded():
+    with obs.tracing() as tr:
+        with tr.span("root", tag="r"):
+            with tr.span("child_a"):
+                with tr.span("leaf"):
+                    pass
+            with tr.span("child_b"):
+                pass
+
+            def worker():
+                # a fresh thread has its own contextvar stack: its spans
+                # must not parent onto the main thread's open spans
+                with tr.span("thread_root"):
+                    with tr.span("thread_leaf"):
+                        pass
+            t = threading.Thread(target=worker)
+            t.start()
+            t.join()
+    spans = {s.name: s for s in tr.spans}
+    assert set(spans) == {"root", "child_a", "child_b", "leaf",
+                          "thread_root", "thread_leaf"}
+    _tree_check(tr.spans)
+    assert spans["child_a"].parent_id == spans["root"].span_id
+    assert spans["leaf"].parent_id == spans["child_a"].span_id
+    assert spans["thread_root"].parent_id is None
+    assert spans["thread_leaf"].parent_id == spans["thread_root"].span_id
+    assert spans["thread_root"].tid != spans["root"].tid
+    # siblings are monotonic: child_b starts after child_a ends
+    assert spans["child_b"].t0 >= spans["child_a"].t1 - 1e-9
+    assert spans["root"].attrs["tag"] == "r"
+
+
+def test_tracing_restores_previous_tracer_and_null_span():
+    assert obs.current() is None
+    with obs.span("noop") as sp:        # disabled: shared null context
+        assert sp is None
+    with obs.tracing() as outer:
+        with obs.tracing() as inner:
+            with obs.span("x"):
+                pass
+        assert obs.current() is outer
+        assert all(s.name != "x" for s in outer.spans)
+        assert any(s.name == "x" for s in inner.spans)
+    assert obs.current() is None
+
+
+def test_chrome_export_round_trip(tmp_path):
+    with obs.tracing() as tr:
+        with tr.span("outer", kind="demo", lanes=3):
+            time.sleep(0.002)
+            with tr.span("inner"):
+                time.sleep(0.001)
+    path = str(tmp_path / "trace.json")
+    tr.export_chrome(path)
+    loaded = obs.load_chrome(path)
+    assert len(loaded) == len(tr.spans)
+    orig = {s.span_id: s for s in tr.spans}
+    base = min(s.t0 for s in tr.spans)
+    for s in loaded:
+        o = orig[s.span_id]
+        assert s.name == o.name and s.parent_id == o.parent_id
+        assert abs((s.t1 - s.t0) - (o.t1 - o.t0)) < 2e-6
+        assert abs(s.t0 - (o.t0 - base)) < 2e-6
+    _tree_check(loaded)
+    lo = {s.name: s for s in loaded}
+    assert lo["outer"].attrs["kind"] == "demo"
+    assert int(lo["outer"].attrs["lanes"]) == 3
+    # the file is valid chrome trace_event JSON
+    with open(path) as f:
+        doc = json.load(f)
+    assert all(ev["ph"] == "X" for ev in doc["traceEvents"])
+
+
+# ------------------------------------------------------------------ #
+# bus + first-use tracking + metrics
+# ------------------------------------------------------------------ #
+def test_first_use_bills_compile_then_dispatch():
+    key = ("test-compile-key", id(object()))
+    assert obs.first_use(key)
+    assert not obs.first_use(key)
+    from repro.core.dgraph import instrument
+    jit_key = ("test-jit-key", id(object()))
+    with instrument() as ins:
+        obs.timed_dispatch("teststage", "testkind", jit_key, lambda: 1)
+        obs.timed_dispatch("teststage", "testkind", jit_key, lambda: 2)
+    d = ins.stage_detail["teststage"]
+    assert d["compile_s"] > 0.0 and d["dispatch_s"] > 0.0
+    assert abs(ins.stage_s["teststage"]
+               - d["compile_s"] - d["dispatch_s"]) < 1e-9
+
+
+def test_metrics_registry_snapshot_and_prometheus():
+    reg = obs.Registry()
+    reg.inc("widgets_total", kind="a")
+    reg.inc("widgets_total", 2, kind="a")
+    reg.observe("latency_seconds", 0.1, cls="s")
+    reg.observe("latency_seconds", 0.3, cls="s")
+    snap = reg.snapshot()
+    assert snap["counters"]['widgets_total{kind="a"}'] == 3
+    h = snap["histograms"]['latency_seconds{cls="s"}']
+    assert h["count"] == 2 and abs(h["sum"] - 0.4) < 1e-9
+    text = reg.render_prometheus()
+    assert '# TYPE widgets_total counter' in text
+    assert 'widgets_total{kind="a"} 3' in text
+    assert 'latency_seconds_count{cls="s"} 2' in text
+    assert 'quantile="0.95"' in text
+    reg.reset()
+    assert reg.snapshot() == {"counters": {}, "histograms": {}}
+
+
+def test_default_registry_sees_launch_events():
+    obs.REGISTRY.reset()
+    from repro.core.nd import nested_dissection
+    from repro.graphs import generators as G
+    nested_dissection(G.grid2d(12, 12), seed=0)
+    snap = obs.REGISTRY.snapshot()
+    launches = {k: v for k, v in snap["counters"].items()
+                if k.startswith("repro_launches_total")}
+    assert launches, "no launch counters recorded"
+    stages = {k: v for k, v in snap["counters"].items()
+              if k.startswith("repro_stage_seconds_total")}
+    assert any('stage="fm"' in k for k in stages)
+
+
+# ------------------------------------------------------------------ #
+# bit-parity + trace content on the host scheduler path
+# ------------------------------------------------------------------ #
+def _order_host(graphs, tracer_out=None, tmp=None):
+    from repro.service.scheduler import order_batch
+    if tracer_out is None:
+        return order_batch(graphs, seeds=list(range(len(graphs)))), None
+    with obs.tracing() as tr:
+        with tr.span("session"):
+            perms = order_batch(graphs, seeds=list(range(len(graphs))))
+    path = str(tmp / tracer_out)
+    tr.export_chrome(path)
+    return perms, path
+
+
+def test_tracing_bit_parity_and_summary_coverage(tmp_path):
+    from repro.graphs import generators as G
+    graphs = [G.grid2d(13, 11), G.rgg2d(220, seed=3), G.grid3d(5, 5, 5)]
+    base, _ = _order_host(graphs)
+    traced, path = _order_host(graphs, "t.json", tmp_path)
+    for a, b in zip(base, traced):
+        assert np.array_equal(a, b), "tracing changed the ordering"
+
+    sys.path.insert(0, "scripts")
+    try:
+        import trace_summary
+    finally:
+        sys.path.pop(0)
+    spans = obs.load_chrome(path)
+    _tree_check(spans)
+    names = {s.name for s in spans}
+    assert {"session", "sched:level", "sched:round"} <= names
+    assert any(n.startswith("dispatch:") for n in names)
+    # the session root span covers the run: >= 95% of wall-clock
+    # attributed, the acceptance bar CI re-checks on the bench trace
+    assert trace_summary.coverage(spans) >= 0.95
+    out = trace_summary.render(spans)
+    assert "sched:level" in out and "dispatch:" in out
+    assert trace_summary.main([path, "--min-coverage", "0.95"]) == 0
+
+
+def test_disabled_tracing_overhead_within_budget(tmp_path):
+    """The ≤5% budget: the no-op span() calls and bus events the traced
+    run would make must cost under 5% of the p=1 quick-graph ordering
+    they decorate (measured as primitive cost × observed call count, so
+    the assertion is robust to CI wall-clock jitter)."""
+    from repro.graphs import generators as G
+    from repro.service.scheduler import order_batch
+    g = G.grid2d(24, 24)                # the quick dnd workload graph
+    order_batch([g])                    # warm the jit caches
+
+    class _Count:
+        events = 0
+
+        def on_event(self, kind, payload):
+            _Count.events += 1
+
+    counter = _Count()
+    obs.register_collector(counter)
+    try:
+        t0 = time.perf_counter()
+        with obs.tracing() as tr:
+            order_batch([g])
+        t_run = time.perf_counter() - t0
+    finally:
+        obs.unregister_collector(counter)
+    n_spans, n_events = len(tr.spans), _Count.events
+    assert n_spans > 0 and n_events > 0
+
+    reps = 2000
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        with obs.span("noop"):          # disabled: shared null context
+            pass
+    span_cost = (time.perf_counter() - t0) / reps
+    payload = {"name": "x", "seconds": 0.0, "compile": False}
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        obs.emit("stage", payload)
+    emit_cost = (time.perf_counter() - t0) / reps
+
+    overhead = n_spans * span_cost + n_events * emit_cost
+    assert overhead <= 0.05 * t_run, (
+        f"disabled-path overhead {overhead * 1e3:.2f}ms is more than 5% "
+        f"of the {t_run * 1e3:.0f}ms ordering "
+        f"({n_spans} spans, {n_events} events)")
+
+
+# ------------------------------------------------------------------ #
+# distributed drivers: tracing on/off × frontier/DFS (subprocess)
+# ------------------------------------------------------------------ #
+_DIST_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import numpy as np
+    from repro import obs
+    from repro.core.dgraph import distribute
+    from repro.core.dnd import DNDConfig, distributed_nested_dissection
+    from repro.graphs import generators as G
+
+    g = G.grid2d(20, 20)
+    dg = distribute(g, 4)
+    kw = dict(centralize_threshold=150, band_central_threshold=96)
+    perms = {}
+    for frontier in (True, False):
+        cfg = DNDConfig(frontier=frontier, **kw)
+        perms[(frontier, False)] = distributed_nested_dissection(
+            dg, seed=0, cfg=cfg)
+        with obs.tracing() as tr:
+            perms[(frontier, True)] = distributed_nested_dissection(
+                dg, seed=0, cfg=cfg)
+        if frontier:
+            names = {s.name for s in tr.spans}
+    ref = perms[(True, False)]
+    out = {
+        "perm_ok": bool(np.array_equal(np.sort(ref), np.arange(g.n))),
+        "all_equal": bool(all(np.array_equal(ref, p)
+                              for p in perms.values())),
+        "has_wave": "wave" in names,
+        "has_dnd": "dnd" in names,
+        "dispatch_kinds": sorted({s.name for s in tr.spans
+                                  if s.name.startswith("dispatch:")}),
+        "wave_attrs_ok": bool(all(
+            "level" in s.attrs and "works" in s.attrs
+            for s in tr.spans if s.name == "wave")),
+    }
+    print(json.dumps(out))
+""")
+
+
+def test_distributed_drivers_bit_identical_with_tracing():
+    res = subprocess.run(
+        [sys.executable, "-c", _DIST_SCRIPT],
+        capture_output=True, text=True, timeout=560,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": os.environ.get("HOME", "/root"),
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["perm_ok"]
+    assert out["all_equal"], \
+        "tracing or driver choice changed the ordering"
+    assert out["has_wave"] and out["has_dnd"]
+    assert out["wave_attrs_ok"]
+    assert any(k.startswith("dispatch:d") for k in out["dispatch_kinds"]), \
+        f"no distributed dispatch spans: {out['dispatch_kinds']}"
