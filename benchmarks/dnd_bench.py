@@ -26,8 +26,19 @@ jax initializes).  Emits ``BENCH_dnd.json``:
   * ``stage_s``: per-stage wall-clock of the p=8 runs (match / bfs /
     halo / band-FM / rebuild / endgame) from ``dgraph.instrument()``;
   * ``match_gather_words``: total all_gather words of the matching
-    launches — 3 dense buffers per round since the grant gather-back
-    compaction (was 4);
+    launches — 3 buffers per round since the grant gather-back
+    compaction (was 4), with the proposal buffers gathered at the
+    lossless proposer cap when the compact path pays for itself;
+    ``match_gather_words_dense`` books the counterfactual dense cost,
+    so the compaction win is the gap between the two;
+  * ``router``: the unified-router multi-request section — N=3
+    concurrent distributed orderings drained through ONE shared
+    ``WaveRouter`` vs 3 sequential single-request drains:
+    ``router_launches_per_wave`` (mean launches per shared wave),
+    ``cross_request_share_rate`` (launches that served lanes of ≥ 2
+    requests), and the gated claims that the concurrent drain is
+    bit-identical to the sequential drains while issuing strictly fewer
+    collective launches;
   * ``max_gather``: the largest centralizing gather (``to_host`` /
     ``unshard_vector`` element count) observed during the p=8 runs —
     the gather-free pipeline keeps it bounded by the configured
@@ -97,9 +108,9 @@ def main() -> None:
 def _bench() -> None:
     import numpy as np
     from benchmarks.common import row
-    from repro.core.dgraph import distribute, instrument
+    from repro.core.dgraph import distribute, instrument, jit_cache_size
     from repro.core.dnd import (DNDConfig, distributed_nested_dissection,
-                                track_band_stats)
+                                distributed_order_batch, track_band_stats)
     from repro.core.nd import nested_dissection
     from repro.sparse.symbolic import nnz_opc
     from repro.util import enable_compile_cache
@@ -113,6 +124,7 @@ def _bench() -> None:
     stage_s = {}
     stage_detail = {}
     match_words = 0
+    match_words_dense = 0
     budget_ok = True
     timing_jitter = 1.0
     for name, g in graphs.items():
@@ -169,12 +181,62 @@ def _bench() -> None:
                     sd["dispatch_s"] += d["dispatch_s"]
                 match_words += sum(l["words"] for l in ins.launches
                                    if l["kind"] == "dmatch")
+                match_words_dense += sum(
+                    l["words_dense"] for l in ins.launches
+                    if l["kind"] == "dmatch")
         per_graph[name] = entry
         row(f"dnd/{name}", entry[f"t_p8_s"] * 1e6,
             n=g.n, opc_ratio=entry["opc_ratio"],
             max_gather=entry["max_gather"],
             budget_ok=entry["launch_budget_ok"],
             **{f"t_p{p}": entry[f"t_p{p}_s"] for p in DEVICE_COUNTS})
+
+    # unified-router multi-request drain: N=3 concurrent distributed
+    # orderings through ONE shared WaveRouter vs 3 sequential drains —
+    # same permutations, strictly fewer collective launches (the wave
+    # router's reason to exist)
+    p_hi0 = max(DEVICE_COUNTS)
+    r_items = (list(graphs.items()) * 3)[:3]
+    r_seeds = [11, 23, 37]
+    r_dgs = [distribute(g, p_hi0) for _, g in r_items]
+    with instrument() as ins_rseq:
+        seq_perms = [distributed_nested_dissection(d, seed=s)
+                     for d, s in zip(r_dgs, r_seeds)]
+    t0 = time.perf_counter()
+    with instrument() as ins_rcon:
+        con_perms = distributed_order_batch(r_dgs, r_seeds)
+    router_dt = time.perf_counter() - t0
+
+    def _dist_launches(ins):
+        return sum(1 for l in ins.launches
+                   if l["kind"] in ("dhalo", "dbfs", "dmatch"))
+
+    r_waves = ins_rcon.waves
+    r_total_launches = sum(sum(w["launches"].values()) for w in r_waves)
+    r_shared = sum(w.get("shared_launches", 0) for w in r_waves)
+    router = {
+        "requests": len(r_dgs),
+        "graphs": [name for name, _ in r_items],
+        "bit_identical": bool(all(
+            np.array_equal(a, b)
+            for a, b in zip(seq_perms, con_perms))),
+        "launches_concurrent": _dist_launches(ins_rcon),
+        "launches_sequential": _dist_launches(ins_rseq),
+        "waves": len(r_waves),
+        "router_launches_per_wave": round(
+            r_total_launches / max(len(r_waves), 1), 3),
+        "cross_request_share_rate": round(
+            r_shared / max(r_total_launches, 1), 4),
+        "multi_request_waves": sum(
+            1 for w in r_waves if w.get("requests", 1) >= 2),
+        "t_s": round(router_dt, 3),
+        "jit_cache_size": jit_cache_size(),
+    }
+    row("dnd/router", router_dt * 1e6,
+        launches_concurrent=router["launches_concurrent"],
+        launches_sequential=router["launches_sequential"],
+        share_rate=router["cross_request_share_rate"],
+        per_wave=router["router_launches_per_wave"])
 
     # forced-sharded-band run (§3.3 alternating-color schedule): lower
     # the centralization threshold so bands really refine sharded, and
@@ -224,8 +286,10 @@ def _bench() -> None:
                     for k, v in sorted(stage_s.items())},
         "launch_budget_ok": budget_ok,
         "match_gather_words": match_words,
+        "match_gather_words_dense": match_words_dense,
         "opc_ratio_mean": round(ratio_mean, 4),
         "max_gather": max_gather,
+        "router": router,
         "band": band,
     }
     with open("BENCH_dnd.json", "w") as f:
@@ -248,6 +312,17 @@ def _bench() -> None:
     assert p8_over_p1 <= 2.75, (
         f"p=8 wall-clock is {p8_over_p1:.2f}x p=1 — frontier batching "
         "regressed toward per-sibling launch growth (baseline 3.03x)")
+    # the router acceptance gates: concurrent == sequential bit-for-bit,
+    # with strictly fewer collective launches and real cross-request
+    # sharing
+    assert router["bit_identical"], \
+        "shared-router drain differs from sequential single drains"
+    assert (router["launches_concurrent"]
+            < router["launches_sequential"]), (
+        f"concurrent drain launched {router['launches_concurrent']}x, "
+        f"sequential {router['launches_sequential']}x — no sharing")
+    assert router["cross_request_share_rate"] > 0.0, \
+        "no launch ever served lanes from >= 2 requests"
     assert band["band_refines"] > 0, "no sharded band refinement ran"
     assert band["conflict_total"] == 0 and band["repair_kicks"] == 0, (
         "alternating-color schedule reported conflicts: "

@@ -61,7 +61,10 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import os
+import threading
 import time
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -227,6 +230,89 @@ def make_parts_mesh(nparts: int) -> Mesh:
 
 
 # ------------------------------------------------------------------ #
+# bounded jit-builder cache (router-managed data-plane policy)
+# ------------------------------------------------------------------ #
+class _JitCache:
+    """LRU over the stacked-collective jit executables.
+
+    A long-lived service accumulates (bucket, lanes, …) shape keys
+    without bound — every new pow2 bucket × lane count × rounds/width
+    combination is a fresh executable.  This cache caps them: keys are
+    *identical* to the ``obs.first_use`` dispatch keys, so an eviction
+    calls ``obs.forget_use(key)`` and the re-build after re-insertion
+    bills itself as a compile again (not a suspiciously slow dispatch).
+    The live entry count is mirrored into the ``repro_jit_cache_size``
+    metric (evictions counted by ``repro_jit_cache_evictions_total``).
+
+    Capacity comes from ``RouterConfig.jit_cache_capacity`` via
+    ``set_jit_cache_capacity`` (env default ``REPRO_JIT_CACHE_CAP``);
+    ``repro.core`` never imports the service layer, so the setter is
+    the interface.
+    """
+
+    def __init__(self, capacity: int):
+        self._cap = max(int(capacity), 1)
+        self._entries: "OrderedDict[Tuple, object]" = OrderedDict()
+        self._lock = threading.Lock()
+
+    def get(self, key: Tuple, builder):
+        with self._lock:
+            fn = self._entries.get(key)
+            if fn is not None:
+                self._entries.move_to_end(key)
+                return fn
+        fn = builder()                  # build outside the lock (slow)
+        with self._lock:
+            if key in self._entries:    # lost a build race: keep theirs
+                fn = self._entries[key]
+            else:
+                self._entries[key] = fn
+                obs.REGISTRY.inc("repro_jit_cache_size")
+            self._entries.move_to_end(key)
+            self._trim()
+        return fn
+
+    def _trim(self) -> None:            # caller holds the lock
+        while len(self._entries) > self._cap:
+            old_key, _ = self._entries.popitem(last=False)
+            obs.forget_use(old_key)
+            obs.REGISTRY.inc("repro_jit_cache_size", -1.0)
+            obs.REGISTRY.inc("repro_jit_cache_evictions_total")
+
+    def set_capacity(self, capacity: int) -> None:
+        with self._lock:
+            self._cap = max(int(capacity), 1)
+            self._trim()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+
+_JIT_CACHE = _JitCache(int(os.environ.get("REPRO_JIT_CACHE_CAP", "64")))
+
+
+def set_jit_cache_capacity(capacity: int) -> None:
+    """Bound the stacked-collective jit cache (RouterConfig surface)."""
+    _JIT_CACHE.set_capacity(capacity)
+
+
+def jit_cache_size() -> int:
+    """Live stacked-collective executables (tests / metrics cross-check)."""
+    return len(_JIT_CACHE)
+
+
+#: compact the matching proposal gather (RouterConfig surface; lossless,
+#: see ``distributed_matching_stacked``)
+_MATCH_COMPACT = os.environ.get("REPRO_MATCH_COMPACT", "1") != "0"
+
+
+def set_match_compact(on: bool) -> None:
+    global _MATCH_COMPACT
+    _MATCH_COMPACT = bool(on)
+
+
+# ------------------------------------------------------------------ #
 # instrumentation: one entry point for every counter (DESIGN.md §4)
 # ------------------------------------------------------------------ #
 @dataclasses.dataclass(eq=False)      # identity semantics: nested blocks
@@ -343,11 +429,17 @@ def _note_halo(size: int) -> None:
 
 
 def _note_launch(kind: str, nparts: int, lanes: int, lanes_pad: int,
-                 bucket: Tuple[int, ...], rounds: int, words: int) -> None:
-    obs.emit("launch", {"kind": kind, "nparts": int(nparts),
-                        "lanes": int(lanes), "lanes_pad": int(lanes_pad),
-                        "bucket": tuple(bucket), "rounds": int(rounds),
-                        "words": int(words)})
+                 bucket: Tuple[int, ...], rounds: int, words: int,
+                 **extra) -> None:
+    """``extra`` carries launch-specific metadata: ``tags`` (per-lane
+    request attribution from the wave router), ``cap`` / ``words_dense``
+    (the matching proposal-gather compaction measurement)."""
+    payload = {"kind": kind, "nparts": int(nparts),
+               "lanes": int(lanes), "lanes_pad": int(lanes_pad),
+               "bucket": tuple(bucket), "rounds": int(rounds),
+               "words": int(words)}
+    payload.update(extra)
+    obs.emit("launch", payload)
 
 
 def _note_band_stats(stats: dict) -> None:
@@ -748,7 +840,6 @@ def _halo_gather(x, gids, vtxdist):
     return jnp.concatenate([x, vals], axis=1)
 
 
-@functools.lru_cache(maxsize=None)
 def _halo_stack_jit(nparts: int, n_loc_max: int, n_ghost_max: int,
                     lanes: int, dtype: str):
     mesh = make_parts_mesh(nparts)
@@ -764,14 +855,18 @@ def _halo_stack_jit(nparts: int, n_loc_max: int, n_ghost_max: int,
 
 
 def halo_exchange_stacked(dgs: Sequence[DGraph],
-                          xs: Sequence[np.ndarray]) -> List[np.ndarray]:
+                          xs: Sequence[np.ndarray],
+                          tags: Optional[Sequence] = None
+                          ) -> List[np.ndarray]:
     """Halo-exchange many same-bucket graphs in ONE shard_map launch.
 
     ``xs[i]`` is graph i's (P, n_loc_max) sharded vector (one dtype for
     the whole stack); returns the (P, n_loc_max + n_ghost_max) extended
     vectors.  Lane i's result is bit-identical to a singleton exchange
     on ``dgs[i]`` — the gather indices are per-lane, the one fused
-    ``all_gather`` only amortizes launch latency.
+    ``all_gather`` only amortizes launch latency.  ``tags`` (optional,
+    one per lane) records each lane's originating request in the launch
+    metadata — the wave router's cross-request attribution.
     """
     key = dgraph_bucket(dgs[0])
     assert all(dgraph_bucket(d) == key for d in dgs), \
@@ -782,15 +877,17 @@ def halo_exchange_stacked(dgs: Sequence[DGraph],
     x_st, L = _lane_pad(xs)
     gid_st, _ = _lane_pad([d.ghost_gid.astype(np.int32) for d in dgs])
     vtx_st, _ = _lane_pad([d.vtxdist.astype(np.int32) for d in dgs])
-    fn = _halo_stack_jit(nparts, nlm, G, x_st.shape[0], str(x_st.dtype))
+    jkey = ("dhalo", nparts, nlm, G, x_st.shape[0], str(x_st.dtype))
+    fn = _JIT_CACHE.get(jkey, lambda: _halo_stack_jit(
+        nparts, nlm, G, x_st.shape[0], str(x_st.dtype)))
     out = obs.timed_dispatch(
-        "halo", "dhalo",
-        ("dhalo", nparts, nlm, G, x_st.shape[0], str(x_st.dtype)),
+        "halo", "dhalo", jkey,
         lambda: np.asarray(fn(jnp.asarray(x_st), jnp.asarray(gid_st),
                               jnp.asarray(vtx_st))),
         lanes=L, lanes_pad=x_st.shape[0], bucket=key)
     _note_launch("dhalo", nparts, L, x_st.shape[0], key[1:], 1,
-                 x_st.shape[0] * nparts * nlm)
+                 x_st.shape[0] * nparts * nlm,
+                 **({"tags": list(tags)} if tags is not None else {}))
     for _ in range(L):                   # per-work sync budget (see doc)
         _note_halo(nparts * nlm)
     return [out[i] for i in range(L)]
@@ -828,7 +925,6 @@ def halo_reference(dg: DGraph, x: np.ndarray) -> np.ndarray:
 # ------------------------------------------------------------------ #
 # distributed band-BFS (lane-stacked)
 # ------------------------------------------------------------------ #
-@functools.lru_cache(maxsize=None)
 def _bfs_stack_jit(nparts: int, n_loc_max: int, dmax: int, n_ghost_max: int,
                    width: int, lanes: int):
     from repro.kernels.ops import ell_relax_step
@@ -856,12 +952,15 @@ def _bfs_stack_jit(nparts: int, n_loc_max: int, dmax: int, n_ghost_max: int,
 
 def distributed_bfs_stacked(dgs: Sequence[DGraph],
                             srcs: Sequence[np.ndarray],
-                            width: int) -> List[np.ndarray]:
+                            width: int,
+                            tags: Optional[Sequence] = None
+                            ) -> List[np.ndarray]:
     """Band-distance sweeps of many same-bucket graphs in ONE launch.
 
     One fused ``all_gather`` per relaxation step serves every lane; the
     per-lane min-plus relaxations (``ell_relax_step`` with a lane axis)
     never mix lanes, so each lane equals its singleton sweep bit-for-bit.
+    ``tags`` attributes lanes to requests (see ``halo_exchange_stacked``).
     """
     key = dgraph_bucket(dgs[0])
     assert all(dgraph_bucket(d) == key for d in dgs), \
@@ -871,15 +970,17 @@ def distributed_bfs_stacked(dgs: Sequence[DGraph],
     src_st, _ = _lane_pad([np.asarray(s, np.int32) for s in srcs])
     gid_st, _ = _lane_pad([d.ghost_gid.astype(np.int32) for d in dgs])
     vtx_st, _ = _lane_pad([d.vtxdist.astype(np.int32) for d in dgs])
-    fn = _bfs_stack_jit(nparts, nlm, dmax, G, width, nbr_st.shape[0])
+    jkey = ("dbfs", nparts, nlm, dmax, G, width, nbr_st.shape[0])
+    fn = _JIT_CACHE.get(jkey, lambda: _bfs_stack_jit(
+        nparts, nlm, dmax, G, width, nbr_st.shape[0]))
     dist = obs.timed_dispatch(
-        "bfs", "dbfs",
-        ("dbfs", nparts, nlm, dmax, G, width, nbr_st.shape[0]),
+        "bfs", "dbfs", jkey,
         lambda: np.asarray(fn(jnp.asarray(nbr_st), jnp.asarray(src_st),
                               jnp.asarray(gid_st), jnp.asarray(vtx_st))),
         lanes=L, lanes_pad=nbr_st.shape[0], bucket=key, width=width)
     _note_launch("dbfs", nparts, L, nbr_st.shape[0], key[1:], width,
-                 width * nbr_st.shape[0] * nparts * nlm)
+                 width * nbr_st.shape[0] * nparts * nlm,
+                 **({"tags": list(tags)} if tags is not None else {}))
     return [dist[i] for i in range(L)]
 
 
@@ -895,9 +996,18 @@ def distributed_bfs(dg: DGraph, src_mask: np.ndarray,
 # ------------------------------------------------------------------ #
 # distributed heavy-edge matching (paper §3.2, lane-stacked)
 # ------------------------------------------------------------------ #
-@functools.lru_cache(maxsize=None)
 def _matching_stack_jit(nparts: int, n_loc_max: int, dmax: int,
-                        n_ghost_max: int, rounds: int, lanes: int):
+                        n_ghost_max: int, rounds: int, lanes: int,
+                        cap: int = 0):
+    """``cap`` > 0 compacts the per-round proposal gather: each shard
+    scatters its (tgt, w, gid) proposals into (L, cap) compact buffers
+    before the ``all_gather``, so the gathered width is the proposer
+    *bound*, not the dense ``n_loc_max``.  The proposer gid travels as
+    an explicit third buffer (the dense layout recovers it from the row
+    position).  With a cap that bounds every round's true proposal
+    count the winner tables — segment max/min over the same (score,
+    gid, target) set — are bit-identical to the dense protocol's.
+    ``cap`` = 0 keeps the dense positional layout."""
     mesh = make_parts_mesh(nparts)
     INT_MAX = jnp.iinfo(jnp.int32).max
     nseg = nparts * n_loc_max + 1       # winner-table slots (+1 dump)
@@ -919,6 +1029,10 @@ def _matching_stack_jit(nparts: int, n_loc_max: int, dmax: int,
         # buffers; every shard can compute it from vtxdist alone
         prop_gid_flat = (vtxdist[:, :nparts, None]
                          + li[None, None, :]).reshape(L, -1)
+
+        def gather_flat(x):
+            return jnp.moveaxis(jax.lax.all_gather(x, "parts"),
+                                0, 1).reshape(x.shape[0], -1)
 
         def ext_at(ext, idx):
             # per-lane gather: ext (L, m), idx (L, n, d) -> (L, n, d)
@@ -959,20 +1073,38 @@ def _matching_stack_jit(nparts: int, n_loc_max: int, dmax: int,
             # derives the same per-acceptor winner table locally (pure
             # function of the gathered buffers), so no grant buffer is
             # ever gathered back — the notify leg costs zero words
-            allt = jnp.moveaxis(jax.lax.all_gather(prop_tgt, "parts"),
-                                0, 1).reshape(L, -1)      # (L, P·nlm)
-            allw = jnp.moveaxis(jax.lax.all_gather(prop_w, "parts"),
-                                0, 1).reshape(L, -1)
+            if cap:
+                # compact the ≤ cap live proposals to the row front and
+                # gather (tgt, w, gid) at width cap instead of n_loc_max.
+                # pos ≥ cap (a non-proposing row, or overflow past the
+                # bound — impossible by construction) drops.
+                pos = jnp.where(
+                    has, jnp.cumsum(has.astype(jnp.int32), axis=1) - 1,
+                    cap)
+                lane2 = jnp.broadcast_to(lane[:, None], pos.shape)
+                ctgt = jnp.full((L, cap), -1, jnp.int32) \
+                    .at[lane2, pos].set(prop_tgt, mode="drop")
+                cw = jnp.zeros((L, cap), jnp.float32) \
+                    .at[lane2, pos].set(prop_w, mode="drop")
+                cgid = jnp.full((L, cap), -1, jnp.int32) \
+                    .at[lane2, pos].set(my_gid, mode="drop")
+                allt = gather_flat(ctgt)                  # (L, P·cap)
+                allw = gather_flat(cw)
+                allg = gather_flat(cgid)
+            else:
+                allt = gather_flat(prop_tgt)              # (L, P·nlm)
+                allw = gather_flat(prop_w)
+                allg = prop_gid_flat
             okp = allt >= 0
             ow, lc = owner_loc(allt)
             seg = jnp.where(okp, ow * n_loc_max + lc, nseg - 1)
             seg_l = (lane[:, None] * nseg + seg).reshape(-1)
-            gsc = allw + hash_unit(prop_gid_flat, allt, r + 31)
+            gsc = allw + hash_unit(allg, allt, r + 31)
             gsc = jnp.where(okp, gsc, -jnp.inf).reshape(-1)
             best = jax.ops.segment_max(gsc, seg_l, num_segments=L * nseg)
             is_best = okp.reshape(-1) & (gsc >= best[seg_l])
             winner = jax.ops.segment_min(
-                jnp.where(is_best, prop_gid_flat.reshape(-1), INT_MAX),
+                jnp.where(is_best, allg.reshape(-1), INT_MAX),
                 seg_l, num_segments=L * nseg).reshape(L, nseg)
 
             # acceptors: my slots of the winner table
@@ -1007,9 +1139,30 @@ def _matching_stack_jit(nparts: int, n_loc_max: int, dmax: int,
     return jax.jit(fn)
 
 
+def _match_proposal_cap(dgs: Sequence[DGraph], nlm: int) -> int:
+    """Lossless per-shard proposal bound of a matching lane stack.
+
+    A vertex can propose in *any* round only if it is valid and has at
+    least one valid ELL edge (``cand`` requires one), so the max over
+    shards and lanes of that count bounds every round's true proposal
+    width — compaction at this cap never drops a proposal, keeping the
+    compact protocol bit-identical to the dense one regardless of which
+    lanes happen to share the launch.  Quantized up to sub-pow2 steps
+    (``max(8, nlm // 8)``) so the jit key space stays coarse.
+    """
+    k = 1
+    for d in dgs:
+        can = (shard_gids(d) >= 0) & (d.nbr_gst >= 0).any(axis=2)
+        k = max(k, int(can.sum(axis=1).max()))
+    q = max(8, nlm // 8)
+    return min(nlm, -(-k // q) * q)
+
+
 def distributed_matching_stacked(dgs: Sequence[DGraph],
                                  seeds: Sequence[int],
-                                 rounds: int = 8) -> List[np.ndarray]:
+                                 rounds: int = 8,
+                                 tags: Optional[Sequence] = None
+                                 ) -> List[np.ndarray]:
     """Match many same-bucket graphs in ONE shard_map launch.
 
     Returns, per graph, the sharded (P, n_loc_max) mate global ids
@@ -1017,6 +1170,14 @@ def distributed_matching_stacked(dgs: Sequence[DGraph],
     repair applied).  Coins, tiebreaks and the per-lane grant reductions
     are functions of each lane's own (gids, seed) alone, so lane i's
     matching is bit-identical to ``distributed_matching(dgs[i], ...)``.
+
+    When compaction is on (``set_match_compact`` / RouterConfig) and the
+    proposer bound is small enough to pay (3·cap < 2·n_loc_max, i.e. the
+    compact round — halo + 3 cap-wide buffers — beats the dense round's
+    3 n_loc_max-wide buffers), the proposal gather runs at the lossless
+    cap of ``_match_proposal_cap``; the launch record then carries
+    ``cap`` and the counterfactual ``words_dense``.  ``tags`` attributes
+    lanes to requests (see ``halo_exchange_stacked``).
     """
     key = dgraph_bucket(dgs[0])
     assert all(dgraph_bucket(d) == key for d in dgs), \
@@ -1028,18 +1189,31 @@ def distributed_matching_stacked(dgs: Sequence[DGraph],
     vtx_st, _ = _lane_pad([d.vtxdist.astype(np.int32) for d in dgs])
     nloc_st, _ = _lane_pad([d.n_loc.astype(np.int32) for d in dgs])
     seed_st, _ = _lane_pad([np.int32(s & 0x7FFFFFFF) for s in seeds])
-    fn = _matching_stack_jit(nparts, nlm, dmax, G, rounds, nbr_st.shape[0])
+    cap = 0
+    if _MATCH_COMPACT:
+        c = _match_proposal_cap(dgs, nlm)
+        if 3 * c < 2 * nlm:
+            cap = c
+    jkey = ("dmatch", nparts, nlm, dmax, G, rounds, nbr_st.shape[0], cap)
+    fn = _JIT_CACHE.get(jkey, lambda: _matching_stack_jit(
+        nparts, nlm, dmax, G, rounds, nbr_st.shape[0], cap))
     m = obs.timed_dispatch(
-        "match", "dmatch",
-        ("dmatch", nparts, nlm, dmax, G, rounds, nbr_st.shape[0]),
+        "match", "dmatch", jkey,
         lambda: np.asarray(fn(jnp.asarray(nbr_st), jnp.asarray(ew_st),
                               jnp.asarray(gid_st), jnp.asarray(vtx_st),
                               jnp.asarray(nloc_st), jnp.asarray(seed_st))),
-        lanes=L, lanes_pad=nbr_st.shape[0], bucket=key, rounds=rounds)
-    # per round: unmatched-mask halo + proposal targets + proposal
-    # weights; the grant gather-back of the pre-frontier protocol is gone
+        lanes=L, lanes_pad=nbr_st.shape[0], bucket=key, rounds=rounds,
+        cap=cap)
+    # per dense round: unmatched-mask halo + proposal targets + proposal
+    # weights (the grant gather-back of the pre-frontier protocol is
+    # gone); a compact round gathers the halo at n_loc_max plus three
+    # cap-wide buffers (targets, weights, proposer gids)
+    words_dense = rounds * 3 * nbr_st.shape[0] * nparts * nlm
+    words = (rounds * nbr_st.shape[0] * nparts * (nlm + 3 * cap)
+             if cap else words_dense)
     _note_launch("dmatch", nparts, L, nbr_st.shape[0], key[1:], rounds,
-                 rounds * 3 * nbr_st.shape[0] * nparts * nlm)
+                 words, cap=cap, words_dense=words_dense,
+                 **({"tags": list(tags)} if tags is not None else {}))
     out = []
     for i, dg in enumerate(dgs):
         gid = shard_gids(dg)

@@ -72,8 +72,6 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import time
-from collections import defaultdict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -84,7 +82,7 @@ from repro.core.band import BFSWork, band_graph_with_anchors, \
     execute_bfs_works
 from repro.core.coarsen import MatchWork, execute_match_works
 from repro.core.dgraph import (DGraph, boundary_mask, color_by_gid,
-                               dgraph_bucket, dgraph_coarsen, dgraph_fold,
+                               dgraph_coarsen, dgraph_fold,
                                dgraph_induced, distributed_bfs_stacked,
                                distributed_matching_stacked,
                                halo_exchange_stacked, np_hash_mix,
@@ -1003,216 +1001,104 @@ def _drive_depth_first(gen):
         return stop.value
 
 
-def _work_kind(work) -> str:
-    if isinstance(work, (list, FMWork)):
-        return "fm"
-    if isinstance(work, BFSWork):
-        return "bfs"
-    if isinstance(work, MatchWork):
-        return "match"
-    if isinstance(work, DMatchWork):
-        return "dmatch"
-    if isinstance(work, DBFSWork):
-        return "dbfs"
-    if isinstance(work, DHaloWork):
-        return "dhalo"
-    raise TypeError(f"unknown work kind: {type(work).__name__}")
-
-
 def _execute_wave(works: List, level: Optional[int] = None
                   ) -> Tuple[List, dict]:
-    """Execute one frontier wave of mixed works, bucketed + lane-stacked.
+    """Compat adapter: one wave through the service wave router.
 
-    Centralized works (``FMWork`` — bare or in per-phase lists —
-    ``BFSWork``, ``MatchWork``) run through the service's bucketed
-    executors; distributed works group by ``dgraph_bucket`` (plus
-    rounds / width / dtype) and each group runs as ONE lane-stacked
-    ``shard_map`` launch.  Per-lane results are independent of wave
-    composition, so wave execution is bit-identical to singleton
-    execution.  Returns (results in input order, wave summary with
-    per-kind works / buckets / launches plus the wave's wall-clock
-    ``t_s`` and per-stage ``stage_s`` rollup).  When tracing is enabled
-    the wave runs under a ``wave`` span whose children are the bucket
-    dispatch spans.
+    The wave executor moved to ``repro.service.router.execute_wave``
+    (the unified-router refactor); this thin forwarder keeps the old
+    ``core.dnd`` entry point alive for existing callers and tests.
+    Imported lazily — ``core`` never imports ``service`` at module
+    scope.
     """
-    results: List = [None] * len(works)
-    summary: Dict[str, dict] = {"works": {}, "buckets": {},
-                                "launches": {}}
-    t_wave = time.perf_counter()
-
-    def note(kind: str, n_works: int, n_buckets: int) -> None:
-        summary["works"][kind] = summary["works"].get(kind, 0) + n_works
-        summary["buckets"][kind] = (summary["buckets"].get(kind, 0)
-                                    + n_buckets)
-
-    # --- centralized device plane: flatten FM lists, bucket by kind
-    fm_items: List[Tuple[int, Optional[int], FMWork]] = []
-    bfs_items: List[Tuple[int, BFSWork]] = []
-    mt_items: List[Tuple[int, MatchWork]] = []
-    for i, w in enumerate(works):
-        if isinstance(w, list):
-            assert all(isinstance(s, FMWork) for s in w)
-            results[i] = [None] * len(w)
-            fm_items.extend((i, j, s) for j, s in enumerate(w))
-        elif isinstance(w, FMWork):
-            fm_items.append((i, None, w))
-        elif isinstance(w, BFSWork):
-            bfs_items.append((i, w))
-        elif isinstance(w, MatchWork):
-            mt_items.append((i, w))
-
-    # the wave's launch counts are *measured*: every executor below
-    # notes its real dispatches into the active instrument blocks, and
-    # this nested block captures exactly this wave's records — so the
-    # launches == buckets budget assertions compare against what
-    # actually ran, not against the wave's own bookkeeping
-    with _dg.instrument() as wave_ins, \
-            obs.span("wave", level=level, works=len(works)):
-        if fm_items:
-            outs = execute_fm_works([w for _, _, w in fm_items])
-            for (i, j, _), r in zip(fm_items, outs):
-                if j is None:
-                    results[i] = r
-                else:
-                    results[i][j] = r
-            note("fm", len(fm_items),
-                 len({w.bucket_key() for _, _, w in fm_items}))
-        if bfs_items:
-            outs = execute_bfs_works([w for _, w in bfs_items])
-            for (i, _), r in zip(bfs_items, outs):
-                results[i] = r
-            note("bfs", len(bfs_items),
-                 len({w.bucket_key() for _, w in bfs_items}))
-        if mt_items:
-            outs = execute_match_works([w for _, w in mt_items])
-            for (i, _), r in zip(mt_items, outs):
-                results[i] = r
-            note("match", len(mt_items),
-                 len({w.bucket_key() for _, w in mt_items}))
-
-        # --- distributed data plane: lane-stack per bucket, ONE launch
-        groups: Dict[Tuple, List[int]] = defaultdict(list)
-        for i, w in enumerate(works):
-            if isinstance(w, DMatchWork):
-                groups[("dmatch", dgraph_bucket(w.dg), w.rounds)].append(i)
-            elif isinstance(w, DBFSWork):
-                groups[("dbfs", dgraph_bucket(w.dg), w.width)].append(i)
-            elif isinstance(w, DHaloWork):
-                groups[("dhalo", dgraph_bucket(w.dg),
-                        str(np.asarray(w.x).dtype))].append(i)
-        counts: Dict[str, List[int]] = defaultdict(list)
-        for key, idxs in groups.items():
-            kind = key[0]
-            counts[kind].append(len(idxs))
-            if kind == "dmatch":
-                outs = distributed_matching_stacked(
-                    [works[i].dg for i in idxs],
-                    [works[i].seed for i in idxs], key[2])
-            elif kind == "dbfs":
-                outs = distributed_bfs_stacked(
-                    [works[i].dg for i in idxs],
-                    [works[i].src for i in idxs], key[2])
-            else:
-                outs = halo_exchange_stacked(
-                    [works[i].dg for i in idxs],
-                    [works[i].x for i in idxs])
-            for i, r in zip(idxs, outs):
-                results[i] = r
-        for kind, ns in counts.items():
-            note(kind, sum(ns), len(ns))
-    for rec in wave_ins.launches:
-        summary["launches"][rec["kind"]] = \
-            summary["launches"].get(rec["kind"], 0) + 1
-    # per-wave rollups: the wave's wall-clock and its per-stage share
-    # (BENCH_dnd.json aggregates these into ``waves`` alongside the
-    # existing launch budgets)
-    summary["t_s"] = time.perf_counter() - t_wave
-    summary["stage_s"] = {k: round(v, 6)
-                          for k, v in wave_ins.stage_s.items()}
-    return results, summary
-
-
-@dataclasses.dataclass
-class _Task:
-    """Frontier bookkeeping of one live generator."""
-    gen: object
-    parent: Optional["_Task"]
-    slot: int
-    started: bool = False
-    n_pending: int = 0
-    child_results: List = dataclasses.field(default_factory=list)
-    done: bool = False
-    result: object = None
-
-
-def _advance(task: _Task, value, blocked: List[Tuple[_Task, object]]
-             ) -> None:
-    """Run a task until it blocks on device work, spawns, or finishes.
-
-    Finishing delivers the return value to the parent's result slot;
-    the parent resumes (recursively) once its last child finishes.
-    """
-    while True:
-        try:
-            if task.started:
-                item = task.gen.send(value)
-            else:
-                task.started = True
-                item = next(task.gen)
-        except StopIteration as stop:
-            task.result, task.done = stop.value, True
-            parent = task.parent
-            if parent is not None:
-                parent.child_results[task.slot] = stop.value
-                parent.n_pending -= 1
-                if parent.n_pending == 0:
-                    _advance(parent, list(parent.child_results), blocked)
-            return
-        if isinstance(item, _Spawn):
-            if not item.tasks:
-                value = []
-                continue
-            task.n_pending = len(item.tasks)
-            task.child_results = [None] * len(item.tasks)
-            for k, sub in enumerate(item.tasks):
-                _advance(_Task(sub, task, k), None, blocked)
-            return
-        blocked.append((task, item))
-        return
+    from repro.service.router import execute_wave
+    return execute_wave(works, level=level)
 
 
 def _drive_frontier(root_gen):
-    """Frontier driver: advance ALL live tasks, then execute one wave.
+    """Compat adapter: drive ONE task tree through a private router.
 
-    Each wave gathers every outstanding work of the whole task tree —
-    siblings at any depth, fold-dup duplicates, centralized instances —
-    and executes it bucketed + lane-stacked (``_execute_wave``).  Wave
-    summaries (works / buckets / launches per kind) are recorded into
-    the active ``dgraph.instrument()`` block as ``waves``, which is
-    where ``BENCH_dnd.json``'s ``launches_by_level`` and the
-    launch-budget tests read them.
+    The frontier driver moved to ``repro.service.router.WaveRouter``,
+    which owns the shared lane stacks of *all* concurrently-submitted
+    orderings; a single-tree drive is now the one-request special case.
     """
-    root = _Task(root_gen, None, 0)
-    blocked: List[Tuple[_Task, object]] = []
-    _advance(root, None, blocked)
-    level = 0
-    while blocked:
-        results, summary = _execute_wave([w for _, w in blocked],
-                                         level=level)
-        summary["level"] = level
-        _dg._note_wave(summary)
-        tasks = [t for t, _ in blocked]
-        blocked = []
-        for t, r in zip(tasks, results):
-            _advance(t, r, blocked)
-        level += 1
-    assert root.done
-    return root.result
+    from repro.service.router import drive_frontier
+    return drive_frontier(root_gen)
 
 
 # ------------------------------------------------------------------ #
-# distributed ND entry point
+# distributed ND entry points
 # ------------------------------------------------------------------ #
+def distributed_order_batch(dgs: List[DGraph], seeds=0, cfgs=None,
+                            return_trees: bool = False):
+    """Order N distributed graphs concurrently through ONE wave router.
+
+    Every request's task tree is submitted to a shared
+    ``repro.service.router.WaveRouter``, so each wave gathers the
+    outstanding device works of ALL requests and dispatches each shape
+    bucket once — lanes from different requests stack into the same
+    ``shard_map`` launch.  Per-lane results are pure functions of the
+    lane's inputs, so each ordering is bit-identical to draining it
+    alone (asserted in ``tests/test_router.py``).  The centralized
+    endgames of all requests merge into a single ``order_batch`` call,
+    sharing their matching / BFS / FM dispatches across requests too.
+
+    Args:
+      dgs: sharded input graphs; requests may differ in size and seed.
+      seeds: one int for all, or one per request.
+      cfgs: one ``DNDConfig`` per request (None → defaults).  All
+        requests must use the frontier driver (``cfg.frontier=True``);
+        the DFS oracle is inherently one-at-a-time.
+      return_trees: return ``DistOrdering`` trees instead of perms.
+
+    Returns a list of permutations (or trees), one per request.
+    """
+    from repro.service.router import WaveRouter
+    from repro.service.scheduler import order_batch
+    from repro.util import enable_compile_cache
+    enable_compile_cache()
+    n = len(dgs)
+    if isinstance(seeds, int):
+        seeds = [seeds] * n
+    if cfgs is None:
+        cfgs = [DNDConfig() for _ in range(n)]
+    assert len(seeds) == n and len(cfgs) == n
+    assert all(c.frontier for c in cfgs), \
+        "distributed_order_batch requires the frontier driver"
+    dords = [DistOrdering(dg.n_global, dg.nparts) for dg in dgs]
+    deferreds: List[List[_Deferred]] = [[] for _ in range(n)]
+    router = WaveRouter()
+    with obs.span("dnd", requests=n,
+                  n=int(sum(dg.n_global for dg in dgs)),
+                  driver="frontier"):
+        for i, (dg, seed, cfg) in enumerate(zip(dgs, seeds, cfgs)):
+            root = _dnd_task(dg, shard_gids(dg), seed, cfg, dords[i],
+                             DistOrdering.root, deferreds[i])
+            router.submit(root, tag=i)
+        router.run()
+        # ONE merged endgame: the gathered subtrees of every request
+        # drain through the scheduler's bucketed executor together
+        flat = [(i, d) for i, ds in enumerate(deferreds) for d in ds]
+        if flat:
+            with _dg.stage("endgame"):
+                perms = order_batch([d.g for _, d in flat],
+                                    [d.seed for _, d in flat],
+                                    [d.nproc for _, d in flat],
+                                    [cfgs[i] for i, _ in flat],
+                                    tags=[i for i, _ in flat])
+            for (i, d), perm in zip(flat, perms):
+                dords[i].add_fragment(d.node, d.gids[perm], d.shard)
+    if return_trees:
+        return dords
+    out = []
+    for dg, dord in zip(dgs, dords):
+        perm = dord.assemble()
+        assert np.array_equal(np.sort(perm), np.arange(dg.n_global)), \
+            "not a permutation"
+        out.append(perm)
+    return out
+
+
 def distributed_nested_dissection(dg: DGraph, seed: int = 0,
                                   cfg: Optional[DNDConfig] = None,
                                   return_tree: bool = False):
@@ -1233,26 +1119,27 @@ def distributed_nested_dissection(dg: DGraph, seed: int = 0,
     The top levels dissect on the sharded representation — no
     ``to_host`` / ``unshard_vector`` above the configured thresholds, as
     asserted by the gather-free tests under ``dgraph.track_gathers()``.
-    Subtrees below ``cfg.centralize_threshold`` are gathered and ordered
-    *together* by the service scheduler's bucketed breadth-first
-    executor, so the sequential endgame of every branch shares its
-    matching / BFS / FM dispatches.  Returns perm (perm[k] = vertex
-    eliminated k-th) unless ``return_tree``.
+    The frontier path is the one-request special case of
+    ``distributed_order_batch``; the DFS path (``cfg.frontier=False``)
+    keeps its own depth-first oracle drive.  Subtrees below
+    ``cfg.centralize_threshold`` are gathered and ordered *together* by
+    the service scheduler's bucketed breadth-first executor.  Returns
+    perm (perm[k] = vertex eliminated k-th) unless ``return_tree``.
     """
+    cfg = cfg or DNDConfig()
+    if cfg.frontier:
+        return distributed_order_batch([dg], [seed], [cfg],
+                                       return_trees=return_tree)[0]
     from repro.service.scheduler import order_batch
     from repro.util import enable_compile_cache
     enable_compile_cache()
-    cfg = cfg or DNDConfig()
     dord = DistOrdering(dg.n_global, dg.nparts)
     deferred: List[_Deferred] = []
     root = _dnd_task(dg, shard_gids(dg), seed, cfg, dord,
                      DistOrdering.root, deferred)
     with obs.span("dnd", n=dg.n_global, nparts=dg.nparts, seed=seed,
-                  driver="frontier" if cfg.frontier else "dfs"):
-        if cfg.frontier:
-            _drive_frontier(root)
-        else:
-            _drive_depth_first(root)
+                  driver="dfs"):
+        _drive_depth_first(root)
         if deferred:
             with _dg.stage("endgame"):
                 perms = order_batch([d.g for d in deferred],

@@ -91,6 +91,17 @@ def first_use(key: Tuple) -> bool:
         return True
 
 
+def forget_use(key: Tuple) -> None:
+    """Forget one compile key (jit-cache eviction hook).
+
+    When a bounded jit cache evicts an executable, its next dispatch
+    recompiles — calling this keeps the compile/dispatch billing honest
+    by making that dispatch a ``first_use`` again.
+    """
+    with _LOCK:
+        _SEEN_KEYS.discard(key)
+
+
 def reset_seen_keys() -> None:
     """Test hook: forget compile-key history."""
     with _LOCK:

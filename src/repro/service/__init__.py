@@ -1,14 +1,21 @@
-"""Batched ordering service (DESIGN.md §3).
+"""Batched ordering service (DESIGN.md §3, §5).
 
 High-throughput front end over the PT-Scotch reproduction: a request
-queue with a graph fingerprint cache, a breadth-first nested-dissection
-scheduler, and bucketed vmap execution of all separator subproblems that
-share a padded ELL shape.
+queue with a graph fingerprint cache, the unified wave router — ONE
+shared lane stack across all concurrently-submitted orderings,
+centralized and distributed — and bucketed execution of every wave's
+subproblems that share a padded ELL shape.
 """
 from repro.service.api import OrderingService, OrderResult
 from repro.service.cache import FingerprintCache
-from repro.service.fingerprint import graph_fingerprint, request_fingerprint
+from repro.service.fingerprint import (dgraph_fingerprint,
+                                       graph_fingerprint,
+                                       request_fingerprint)
+from repro.service.router import (RouterConfig, WaveRouter, execute_wave,
+                                  global_config)
 from repro.service.scheduler import order_batch
 
 __all__ = ["OrderingService", "OrderResult", "FingerprintCache",
-           "graph_fingerprint", "request_fingerprint", "order_batch"]
+           "RouterConfig", "WaveRouter", "dgraph_fingerprint",
+           "execute_wave", "global_config", "graph_fingerprint",
+           "order_batch", "request_fingerprint"]

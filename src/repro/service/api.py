@@ -10,10 +10,15 @@ Usage (see examples/serve_orderings.py):
 
 ``submit`` fingerprints the request (CSR content + seed + nproc + config);
 a cache hit resolves immediately and duplicate *pending* fingerprints are
-coalesced so each unique problem is ordered once per drain.  ``drain``
-hands all unique pending requests to the breadth-first scheduler
-(``order_batch``), which executes separator work — matching, band BFS and
-FM — bucketed across the whole queue.
+coalesced so each unique problem is ordered once per drain.
+``submit_distributed`` does the same for sharded ``DGraph`` requests
+(fingerprinted over the full shard layout + seed + ``DNDConfig``).
+``drain`` feeds ALL unique pending requests — distributed trees through
+``distributed_order_batch``, host graphs through ``order_batch`` — into
+the shared wave router, which executes each wave's separator work —
+matching, band BFS and FM, centralized and lane-stacked distributed —
+bucketed across the whole queue: one launch per shape bucket per wave,
+regardless of how many requests contributed lanes.
 
 Contracts: graphs are ``core.graph.Graph`` (symmetric CSR, host numpy);
 results carry ``perm`` with perm[k] = vertex eliminated k-th, always a
@@ -36,7 +41,8 @@ from repro import obs
 from repro.core.graph import Graph
 from repro.core.nd import NDConfig
 from repro.service.cache import FingerprintCache
-from repro.service.fingerprint import request_fingerprint
+from repro.service.fingerprint import (dgraph_fingerprint,
+                                       request_fingerprint)
 from repro.service.scheduler import order_batch
 
 #: size-class boundaries (vertex count → class label); the classes key
@@ -75,6 +81,15 @@ class _PendingReq:
     cfg: NDConfig
 
 
+@dataclasses.dataclass
+class _PendingDistReq:
+    request_id: int
+    t_submit: float
+    dg: object                      # core.dgraph.DGraph
+    seed: int
+    cfg: object                     # core.dnd.DNDConfig
+
+
 class OrderingService:
     """Batched nested-dissection ordering service (single-process)."""
 
@@ -91,6 +106,7 @@ class OrderingService:
         self._result_capacity = result_capacity
         self._results: "OrderedDict[int, OrderResult]" = OrderedDict()
         self._pending: Dict[str, list] = {}
+        self._pending_dist: Dict[str, list] = {}
         self._latencies: deque = deque(maxlen=latency_window)
         # queue-wait and execution components recorded separately: the
         # end-to-end latency of a drained request is dominated by how
@@ -139,6 +155,34 @@ class OrderingService:
             self._pending.setdefault(fp, []).append(req)
             return rid
 
+    def submit_distributed(self, dg, seed: int = 0, cfg=None) -> int:
+        """Enqueue a distributed (sharded ``DGraph``) ordering request.
+
+        Same cache/coalescing semantics as ``submit``; misses resolve at
+        the next ``drain``, where ALL queued distributed trees drain
+        through one shared wave router (``distributed_order_batch``) —
+        their same-bucket subproblems stack into shared launches.
+        """
+        from repro.core.dnd import DNDConfig
+        cfg = cfg or DNDConfig()
+        t0 = time.perf_counter()
+        fp = dgraph_fingerprint(dg, seed, cfg)          # pure: no lock
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._n_submitted += 1
+            perm = self.cache.get(fp)
+            if perm is not None:
+                obs.REGISTRY.inc("repro_service_requests_total",
+                                 result="hit")
+                self._resolve(rid, perm, True, t0, fp, queue_wait=0.0,
+                              n=dg.n_global)
+                return rid
+            obs.REGISTRY.inc("repro_service_requests_total", result="miss")
+            req = _PendingDistReq(rid, t0, dg, seed, cfg)
+            self._pending_dist.setdefault(fp, []).append(req)
+            return rid
+
     def poll(self, rid: int) -> Optional[OrderResult]:
         """Result for a request id, or None while still queued."""
         with self._lock:
@@ -146,44 +190,65 @@ class OrderingService:
 
     def queue_depth(self) -> int:
         with self._lock:
-            return sum(len(v) for v in self._pending.values())
+            return (sum(len(v) for v in self._pending.values())
+                    + sum(len(v) for v in self._pending_dist.values()))
 
     # ------------------------------------------------------------------ #
     def drain(self) -> Dict[int, OrderResult]:
-        """Order every queued request in one bucketed batch.
+        """Order every queued request through the shared wave router.
 
-        Duplicate fingerprints are computed once and fanned out.  Returns
-        {request_id: OrderResult} for the requests resolved by this call.
-        The batched execution itself runs *outside* the service lock, so
-        submits on other threads stay responsive during a drain (they
-        queue for the next one).
+        Duplicate fingerprints are computed once and fanned out.
+        Distributed requests drain first — all their task trees share one
+        ``WaveRouter`` (same-bucket lanes of different requests stack
+        into shared launches, and their centralized endgames merge into
+        one ``order_batch``) — then the host-graph queue drains through
+        its own shared router.  Returns {request_id: OrderResult} for the
+        requests resolved by this call.  The batched execution itself
+        runs *outside* the service lock, so submits on other threads stay
+        responsive during a drain (they queue for the next one).
         """
         with self._lock:
-            if not self._pending:
+            if not (self._pending or self._pending_dist):
                 return {}
             pending, self._pending = self._pending, {}
+            pending_dist, self._pending_dist = self._pending_dist, {}
         fps = list(pending)
         heads = [pending[fp][0] for fp in fps]
+        dfps = list(pending_dist)
+        dheads = [pending_dist[fp][0] for fp in dfps]
         t0 = time.perf_counter()
-        with obs.span("drain", batches=len(fps)):
-            perms = order_batch([r.graph for r in heads],
-                                [r.seed for r in heads],
-                                [r.nproc for r in heads],
-                                [r.cfg for r in heads])
+        with obs.span("drain", batches=len(fps), dist_batches=len(dfps)):
+            dperms = []
+            if dheads:
+                from repro.core.dnd import distributed_order_batch
+                dperms = distributed_order_batch(
+                    [r.dg for r in dheads], [r.seed for r in dheads],
+                    [r.cfg for r in dheads])
+            perms = []
+            if heads:
+                perms = order_batch([r.graph for r in heads],
+                                    [r.seed for r in heads],
+                                    [r.nproc for r in heads],
+                                    [r.cfg for r in heads])
         dt = time.perf_counter() - t0
         resolved: Dict[int, OrderResult] = {}
         n_resolved = 0
         with self._lock:
-            for fp, perm, head in zip(fps, perms, heads):
+            for fp, perm, head, n in (
+                    [(f, p, h, h.graph.n)
+                     for f, p, h in zip(fps, perms, heads)]
+                    + [(f, p, h, h.dg.n_global)
+                       for f, p, h in zip(dfps, dperms, dheads)]):
                 self.cache.put(fp, perm)
-                for k, req in enumerate(pending[fp]):
+                reqs = pending.get(fp) or pending_dist[fp]
+                for k, req in enumerate(reqs):
                     res = self._resolve(req.request_id, perm, k > 0,
                                         req.t_submit, fp,
                                         queue_wait=t0 - req.t_submit,
-                                        exec_s=dt, n=head.graph.n)
+                                        exec_s=dt, n=n)
                     resolved[req.request_id] = res
                     n_resolved += 1
-            self._n_computed += len(fps)
+            self._n_computed += len(fps) + len(dfps)
             self._drain_time_s += dt
             self._n_drained += n_resolved
         return resolved
@@ -217,8 +282,9 @@ class OrderingService:
                 "cache_hits": self.cache.hits,
                 "cache_hit_rate": round(self.cache.hit_rate, 4),
                 "cache_size": len(self.cache),
-                "queue_depth": sum(len(v)
-                                   for v in self._pending.values()),
+                "queue_depth": (
+                    sum(len(v) for v in self._pending.values())
+                    + sum(len(v) for v in self._pending_dist.values())),
                 **pcts(self._latencies, "latency"),
                 **pcts(self._queue_waits, "queue_wait"),
                 **pcts(self._execs, "exec"),

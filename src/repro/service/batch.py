@@ -1,70 +1,41 @@
-"""Bucketed execution of outstanding pipeline work (DESIGN.md §3).
+"""Compat wrappers over the router's stage table (DESIGN.md §3).
 
-``run_works`` takes the mixed list of device-work items that a wave of
-separator tasks is blocked on, splits it by kind, and hands each kind to
-its bucketed executor: ``execute_fm_works`` / ``execute_bfs_works`` /
-``execute_match_works`` group by padded ELL shape and run ONE vmapped
-dispatch per bucket.  Per-lane results are independent of batch
-composition, so driving N subproblems through here is result-identical to
-driving them one at a time — just with O(bucket) fewer dispatches.
+The wave execution that used to live here — split a mixed work list by
+kind, hand each kind to its bucketed executor — is now one stage table
+in ``service.router.execute_wave``, shared with the distributed plane.
+``run_works`` and ``drive_tasks`` remain as thin adapters for callers
+that hold bare host-side work lists or generators: same contract
+(per-lane results independent of batch composition, so batched execution
+is result-identical to one-at-a-time), same bucketed dispatch counts.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import List, Sequence
 
-from repro import obs
-from repro.core.band import BFSWork, execute_bfs_works
-from repro.core.coarsen import MatchWork, execute_match_works
-from repro.core.fm import FMWork, execute_fm_works
+from repro.core.band import BFSWork
+from repro.core.coarsen import MatchWork
+from repro.core.fm import FMWork
+from repro.service.router import WaveRouter, execute_wave
 
 
 def run_works(works: Sequence[object]) -> List[object]:
     """Execute a heterogeneous batch of works; results in input order."""
-    fm_idx = [i for i, w in enumerate(works) if isinstance(w, FMWork)]
-    bfs_idx = [i for i, w in enumerate(works) if isinstance(w, BFSWork)]
-    mt_idx = [i for i, w in enumerate(works) if isinstance(w, MatchWork)]
-    assert len(fm_idx) + len(bfs_idx) + len(mt_idx) == len(works), \
-        "unknown work kind"
-    out: Dict[int, object] = {}
-    if fm_idx:
-        for i, res in zip(fm_idx,
-                          execute_fm_works([works[i] for i in fm_idx])):
-            out[i] = res
-    if bfs_idx:
-        for i, res in zip(bfs_idx,
-                          execute_bfs_works([works[i] for i in bfs_idx])):
-            out[i] = res
-    if mt_idx:
-        for i, res in zip(mt_idx,
-                          execute_match_works([works[i] for i in mt_idx])):
-            out[i] = res
-    return [out[i] for i in range(len(works))]
+    assert all(isinstance(w, (FMWork, BFSWork, MatchWork))
+               for w in works), "unknown work kind"
+    results, _ = execute_wave(list(works))
+    return results
 
 
 def drive_tasks(generators: Sequence) -> List[object]:
-    """Drive work-yielding generators in lockstep waves.
+    """Drive work-yielding generators through one shared router.
 
-    Each round gathers the current outstanding work of every live
-    generator, executes it bucketed, and resumes them.  Generators finish
-    at different depths (different multilevel level counts); the wave
-    simply shrinks.  Returns each generator's return value, in order.
+    Each wave gathers the current outstanding work of every live
+    generator, executes it bucketed, and resumes them.  Generators
+    finish at different depths (different multilevel level counts); the
+    wave simply shrinks.  Returns each generator's return value, in
+    order.
     """
-    results: Dict[int, object] = {}
-    pending: Dict[int, object] = {}
-    for i, gen in enumerate(generators):
-        try:
-            pending[i] = next(gen)
-        except StopIteration as stop:
-            results[i] = stop.value
-    while pending:
-        idxs = sorted(pending)
-        with obs.span("sched:round", works=len(idxs)):
-            outs = run_works([pending[i] for i in idxs])
-        nxt: Dict[int, object] = {}
-        for i, res in zip(idxs, outs):
-            try:
-                nxt[i] = generators[i].send(res)
-            except StopIteration as stop:
-                results[i] = stop.value
-        pending = nxt
-    return [results[i] for i in range(len(generators))]
+    router = WaveRouter()
+    for gen in generators:
+        router.submit(gen)
+    return router.run()

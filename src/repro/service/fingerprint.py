@@ -34,3 +34,24 @@ def request_fingerprint(g: Graph, seed: int, nproc: int,
     h.update(f"|seed={seed}|nproc={nproc}|".encode())
     h.update(repr(dataclasses.astuple(cfg)).encode())
     return h.hexdigest()
+
+
+def dgraph_fingerprint(dg, seed: int, cfg) -> str:
+    """Cache key for a distributed ordering request.
+
+    Hashes the full sharded representation (shard layout included: the
+    same global graph distributed differently takes different multilevel
+    paths, so layout must be part of the key) plus seed and ``DNDConfig``.
+    Equal fingerprints imply bit-identical orderings — the distributed
+    pipeline is deterministic given (dg, seed, cfg).
+    """
+    h = hashlib.blake2b(digest_size=16)
+    for arr in (dg.vtxdist, dg.nbr_gst, dg.ewgt_gst, dg.ghost_gid,
+                dg.n_loc, dg.n_ghost, dg.vwgt):
+        # same injective dtype/shape-delimited encoding as
+        # ``graph_fingerprint``
+        h.update(f"{arr.dtype}:{arr.shape}|".encode())
+        h.update(arr.tobytes())
+    h.update(f"|seed={seed}|".encode())
+    h.update(repr(dataclasses.astuple(cfg)).encode())
+    return h.hexdigest()

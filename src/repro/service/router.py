@@ -1,0 +1,392 @@
+"""Unified wave router: one shared lane stack for the whole service.
+
+The PR 5 frontier driver lane-stacked same-bucket subgraphs of ONE
+distributed ordering into single ``shard_map`` dispatches, but the
+service still drained each request through its own private frontier —
+concurrent requests never shared a launch, and the wave logic lived
+twice (``core/dnd`` for distributed trees, ``service/batch`` for
+centralized ones).  This module is the merge (DESIGN.md §5): one
+**WaveRouter** owns the frontier of *all* concurrently-submitted task
+trees and executes every wave through one stage table —
+
+  * centralized work (``FMWork`` — bare or in per-phase lists —
+    ``BFSWork``, ``MatchWork``) runs through the bucketed vmap
+    executors, one dispatch per ELL bucket;
+  * distributed work (``DMatchWork`` / ``DBFSWork`` / ``DHaloWork``)
+    groups by ``dgraph_bucket`` (plus rounds / width / dtype) and each
+    group runs as ONE lane-stacked ``shard_map`` launch, regardless of
+    how many *requests* contributed lanes.
+
+Launches per wave are therefore bounded by live shape buckets, not by
+requests.  Per-lane results are pure functions of each lane's own
+inputs (the stacked collectives' bit-parity contract), so routing N
+trees through shared waves is bit-identical to draining them one at a
+time — asserted by ``tests/test_router.py``.
+
+``RouterConfig`` (alpa ``global_env``-style: one plain object, grouped
+options, env-var defaults) is the single surface for wave policy —
+lane stacking, the bounded jit-builder cache, the matching
+proposal-gather compaction, and the future mesh/device-group and
+preemption knobs.  ``global_config`` is the process default; a
+``WaveRouter`` applies its config's data-plane knobs on construction.
+
+Tasks are generators yielding typed work descriptors (or ``_Spawn``
+lists of subtasks) and receiving results — the same protocol
+``nd.separator_task`` and every ``core/dnd`` task already speak.  The
+depth-first oracle (``dnd._drive_depth_first``) is unchanged and stays
+the bit-parity reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro import obs
+from repro.core import dgraph as _dg
+from repro.core.band import BFSWork, execute_bfs_works
+from repro.core.coarsen import MatchWork, execute_match_works
+from repro.core.dgraph import (dgraph_bucket, distributed_bfs_stacked,
+                               distributed_matching_stacked,
+                               halo_exchange_stacked)
+from repro.core.dnd import DBFSWork, DHaloWork, DMatchWork, _Spawn
+from repro.core.fm import FMWork, execute_fm_works
+
+
+# ------------------------------------------------------------------ #
+# configuration (exemplar: alpa's global_env.py)
+# ------------------------------------------------------------------ #
+class RouterConfig:
+    """Global wave-router configuration.
+
+    One plain object with grouped options and env-var defaults, shared
+    by every layer that used to carry its own knobs (``DNDConfig``'s
+    driver switch, the scheduler's implicit wave policy, ``dgraph``'s
+    unbounded jit caches).  Mutate ``global_config`` for process-wide
+    policy, or hand a private instance to one ``WaveRouter``.
+    """
+
+    def __init__(self):
+        ########## wave scheduling ##########
+        # advance all live tasks until blocked, then execute one
+        # bucketed lane-stacked wave (False is only meaningful through
+        # the depth-first oracle, which bypasses the router entirely)
+        self.frontier_waves = True
+        # reserved preemption surface for the SLO work: a wave executes
+        # at most this many works (None = unbounded; the only value the
+        # current executors implement)
+        self.max_wave_works: Optional[int] = None
+
+        ########## mesh / device groups ##########
+        # device group serving distributed buckets; None = the default
+        # host-local mesh built by dgraph.make_parts_mesh (a
+        # jax.distributed multi-host mesh is the planned extension)
+        self.mesh = None
+
+        ########## jit-builder cache (core/dgraph) ##########
+        # bounded LRU over the stacked-collective jit builders, keyed
+        # (kind, bucket, lanes, ...); evictions rebill the next
+        # dispatch as a compile via obs.forget_use
+        self.jit_cache_capacity = int(
+            os.environ.get("REPRO_JIT_CACHE_CAP", "64"))
+
+        ########## matching proposal-gather compaction ##########
+        # gather proposals capped at the true per-shard proposer bound
+        # instead of the dense n_loc_max width (lossless; see
+        # dgraph.distributed_matching_stacked)
+        self.match_compact = os.environ.get(
+            "REPRO_MATCH_COMPACT", "1") != "0"
+
+    def apply(self) -> None:
+        """Push the data-plane knobs down into ``core/dgraph``.
+
+        ``repro.core`` never imports the service layer, so the router
+        applies its config through dgraph's setter surface instead of
+        dgraph reading this object.
+        """
+        _dg.set_jit_cache_capacity(self.jit_cache_capacity)
+        _dg.set_match_compact(self.match_compact)
+
+
+global_config = RouterConfig()
+
+
+# ------------------------------------------------------------------ #
+# work typing (the router's stage table)
+# ------------------------------------------------------------------ #
+def work_kind(work) -> str:
+    """Stage-table kind of one yielded work descriptor."""
+    if isinstance(work, (list, FMWork)):
+        return "fm"
+    if isinstance(work, BFSWork):
+        return "bfs"
+    if isinstance(work, MatchWork):
+        return "match"
+    if isinstance(work, DMatchWork):
+        return "dmatch"
+    if isinstance(work, DBFSWork):
+        return "dbfs"
+    if isinstance(work, DHaloWork):
+        return "dhalo"
+    raise TypeError(f"unknown work kind: {type(work).__name__}")
+
+
+def execute_wave(works: List, level: Optional[int] = None,
+                 tags: Optional[Sequence] = None) -> Tuple[List, dict]:
+    """Execute one wave of mixed works, bucketed + lane-stacked.
+
+    Centralized works (``FMWork`` — bare or in per-phase lists —
+    ``BFSWork``, ``MatchWork``) run through the bucketed vmap
+    executors; distributed works group by ``dgraph_bucket`` (plus
+    rounds / width / dtype) and each group runs as ONE lane-stacked
+    ``shard_map`` launch.  Per-lane results are independent of wave
+    composition, so wave execution is bit-identical to singleton
+    execution.
+
+    ``tags`` (optional, aligned with ``works``) attributes each work to
+    its originating request: the wave summary then carries ``requests``
+    (distinct tags present) and ``shared_launches`` (bucket groups that
+    received lanes from ≥ 2 requests — the cross-request sharing the
+    router exists for), and each distributed launch records its lanes'
+    tags (``dgraph`` launch metadata).
+
+    Returns (results in input order, wave summary with per-kind works /
+    buckets / launches plus the wave's wall-clock ``t_s`` and per-stage
+    ``stage_s`` rollup).  When tracing is enabled the wave runs under a
+    ``router:wave`` span whose children are the bucket dispatch spans.
+    """
+    for w in works:
+        work_kind(w)                    # reject unknown kinds up front
+    results: List = [None] * len(works)
+    summary: Dict[str, dict] = {"works": {}, "buckets": {},
+                                "launches": {}}
+    t_wave = time.perf_counter()
+    tag_of = (lambda i: None) if tags is None else (lambda i: tags[i])
+    group_tags: Dict[Tuple, set] = defaultdict(set)
+
+    def note(kind: str, n_works: int, n_buckets: int) -> None:
+        summary["works"][kind] = summary["works"].get(kind, 0) + n_works
+        summary["buckets"][kind] = (summary["buckets"].get(kind, 0)
+                                    + n_buckets)
+
+    # --- centralized device plane: flatten FM lists, bucket by kind
+    fm_items: List[Tuple[int, Optional[int], FMWork]] = []
+    bfs_items: List[Tuple[int, BFSWork]] = []
+    mt_items: List[Tuple[int, MatchWork]] = []
+    for i, w in enumerate(works):
+        if isinstance(w, list):
+            assert all(isinstance(s, FMWork) for s in w)
+            results[i] = [None] * len(w)
+            fm_items.extend((i, j, s) for j, s in enumerate(w))
+        elif isinstance(w, FMWork):
+            fm_items.append((i, None, w))
+        elif isinstance(w, BFSWork):
+            bfs_items.append((i, w))
+        elif isinstance(w, MatchWork):
+            mt_items.append((i, w))
+
+    # the wave's launch counts are *measured*: every executor below
+    # notes its real dispatches into the active instrument blocks, and
+    # this nested block captures exactly this wave's records — so the
+    # launches == buckets budget assertions compare against what
+    # actually ran, not against the wave's own bookkeeping
+    n_requests = (len({tags[i] for i in range(len(works))})
+                  if tags is not None and works else 1)
+    with _dg.instrument() as wave_ins, \
+            obs.span("router:wave", level=level, works=len(works),
+                     requests=n_requests):
+        if fm_items:
+            outs = execute_fm_works([w for _, _, w in fm_items])
+            for (i, j, _), r in zip(fm_items, outs):
+                if j is None:
+                    results[i] = r
+                else:
+                    results[i][j] = r
+            note("fm", len(fm_items),
+                 len({w.bucket_key() for _, _, w in fm_items}))
+            for i, _, w in fm_items:
+                group_tags[("fm", w.bucket_key())].add(tag_of(i))
+        if bfs_items:
+            outs = execute_bfs_works([w for _, w in bfs_items])
+            for (i, _), r in zip(bfs_items, outs):
+                results[i] = r
+            note("bfs", len(bfs_items),
+                 len({w.bucket_key() for _, w in bfs_items}))
+            for i, w in bfs_items:
+                group_tags[("bfs", w.bucket_key())].add(tag_of(i))
+        if mt_items:
+            outs = execute_match_works([w for _, w in mt_items])
+            for (i, _), r in zip(mt_items, outs):
+                results[i] = r
+            note("match", len(mt_items),
+                 len({w.bucket_key() for _, w in mt_items}))
+            for i, w in mt_items:
+                group_tags[("match", w.bucket_key())].add(tag_of(i))
+
+        # --- distributed data plane: lane-stack per bucket, ONE launch
+        groups: Dict[Tuple, List[int]] = defaultdict(list)
+        for i, w in enumerate(works):
+            if isinstance(w, DMatchWork):
+                groups[("dmatch", dgraph_bucket(w.dg), w.rounds)].append(i)
+            elif isinstance(w, DBFSWork):
+                groups[("dbfs", dgraph_bucket(w.dg), w.width)].append(i)
+            elif isinstance(w, DHaloWork):
+                groups[("dhalo", dgraph_bucket(w.dg),
+                        str(np.asarray(w.x).dtype))].append(i)
+        counts: Dict[str, List[int]] = defaultdict(list)
+        for key, idxs in groups.items():
+            kind = key[0]
+            counts[kind].append(len(idxs))
+            lane_tags = (None if tags is None
+                         else [tags[i] for i in idxs])
+            if kind == "dmatch":
+                outs = distributed_matching_stacked(
+                    [works[i].dg for i in idxs],
+                    [works[i].seed for i in idxs], key[2],
+                    tags=lane_tags)
+            elif kind == "dbfs":
+                outs = distributed_bfs_stacked(
+                    [works[i].dg for i in idxs],
+                    [works[i].src for i in idxs], key[2],
+                    tags=lane_tags)
+            else:
+                outs = halo_exchange_stacked(
+                    [works[i].dg for i in idxs],
+                    [works[i].x for i in idxs], tags=lane_tags)
+            for i, r in zip(idxs, outs):
+                results[i] = r
+            group_tags[key].update(tag_of(i) for i in idxs)
+        for kind, ns in counts.items():
+            note(kind, sum(ns), len(ns))
+    for rec in wave_ins.launches:
+        summary["launches"][rec["kind"]] = \
+            summary["launches"].get(rec["kind"], 0) + 1
+    # per-wave rollups: the wave's wall-clock, its per-stage share, and
+    # the cross-request attribution (BENCH_dnd.json aggregates these
+    # into ``waves`` alongside the existing launch budgets)
+    summary["t_s"] = time.perf_counter() - t_wave
+    summary["stage_s"] = {k: round(v, 6)
+                          for k, v in wave_ins.stage_s.items()}
+    summary["requests"] = n_requests
+    summary["shared_launches"] = sum(
+        1 for s in group_tags.values() if len(s) >= 2)
+    return results, summary
+
+
+# ------------------------------------------------------------------ #
+# the router: shared frontier over many task trees
+# ------------------------------------------------------------------ #
+@dataclasses.dataclass
+class _Task:
+    """Frontier bookkeeping of one live generator."""
+    gen: object
+    parent: Optional["_Task"]
+    slot: int
+    tag: object = None              # originating request (inherited)
+    started: bool = False
+    n_pending: int = 0
+    child_results: List = dataclasses.field(default_factory=list)
+    done: bool = False
+    result: object = None
+
+
+def _advance(task: _Task, value, blocked: List[Tuple[_Task, object]]
+             ) -> None:
+    """Run a task until it blocks on device work, spawns, or finishes.
+
+    Finishing delivers the return value to the parent's result slot;
+    the parent resumes (recursively) once its last child finishes.
+    Spawned subtasks inherit the task's request tag.
+    """
+    while True:
+        try:
+            if task.started:
+                item = task.gen.send(value)
+            else:
+                task.started = True
+                item = next(task.gen)
+        except StopIteration as stop:
+            task.result, task.done = stop.value, True
+            parent = task.parent
+            if parent is not None:
+                parent.child_results[task.slot] = stop.value
+                parent.n_pending -= 1
+                if parent.n_pending == 0:
+                    _advance(parent, list(parent.child_results), blocked)
+            return
+        if isinstance(item, _Spawn):
+            if not item.tasks:
+                value = []
+                continue
+            task.n_pending = len(item.tasks)
+            task.child_results = [None] * len(item.tasks)
+            for k, sub in enumerate(item.tasks):
+                _advance(_Task(sub, task, k, tag=task.tag), None, blocked)
+            return
+        blocked.append((task, item))
+        return
+
+
+class WaveRouter:
+    """Shared frontier driver over any number of submitted task trees.
+
+    ``submit`` registers a task-tree generator under a request tag and
+    advances it until it blocks; ``run`` then walks ALL submitted trees
+    in readiness waves — every wave gathers the outstanding works of
+    every live task (siblings at any depth, fold-dup duplicates,
+    different *requests*) and executes them through ``execute_wave``,
+    so same-bucket lanes share launches across request boundaries.
+    Wave summaries are recorded into the active ``dgraph.instrument()``
+    blocks as ``waves`` (where BENCH_dnd.json's ``launches_by_level``
+    and the launch-budget tests read them).
+
+    Per-lane results are independent of wave composition, so the
+    results are bit-identical to driving each tree alone (or
+    depth-first).  ``submit`` after a ``run`` is allowed: the router is
+    reusable drain-to-drain.
+    """
+
+    def __init__(self, cfg: Optional[RouterConfig] = None):
+        self.cfg = cfg or global_config
+        self.cfg.apply()
+        self._roots: List[_Task] = []
+        self._blocked: List[Tuple[_Task, object]] = []
+        self._level = 0
+
+    def submit(self, gen, tag=None) -> int:
+        """Register one task tree; returns its index into ``run()``."""
+        idx = len(self._roots)
+        task = _Task(gen, None, 0, tag=idx if tag is None else tag)
+        self._roots.append(task)
+        _advance(task, None, self._blocked)
+        return idx
+
+    def run(self) -> List:
+        """Drive all submitted trees to completion; results in order."""
+        while True:
+            blocked, self._blocked = self._blocked, []
+            if not blocked:
+                break
+            results, summary = execute_wave(
+                [w for _, w in blocked], level=self._level,
+                tags=[t.tag for t, _ in blocked])
+            summary["level"] = self._level
+            _dg._note_wave(summary)
+            for (t, _), r in zip(blocked, results):
+                _advance(t, r, self._blocked)
+            self._level += 1
+        assert all(t.done for t in self._roots), \
+            "router finished with live tasks"
+        return [t.result for t in self._roots]
+
+
+def drive_frontier(root_gen, cfg: Optional[RouterConfig] = None):
+    """Drive ONE task tree through a private router (compat surface for
+    ``dnd``'s single-ordering entry points and the frontier tests)."""
+    router = WaveRouter(cfg)
+    router.submit(root_gen)
+    return router.run()[0]

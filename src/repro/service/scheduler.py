@@ -1,51 +1,42 @@
-"""Breadth-first nested dissection over many graphs at once (DESIGN.md §3).
+"""Router-fed nested dissection over many graphs at once (DESIGN.md §3).
 
 ``core.nd`` recurses depth-first through one ND tree, dispatching each
-subproblem's kernels on its own.  The scheduler instead keeps a *frontier*
-of ND nodes across ALL submitted graphs and walks the trees level by
-level: every node at the current depth that needs a separator contributes
-its pipeline generator, and ``drive_tasks`` executes each wave of
-outstanding matching / BFS / FM work as bucketed vmap batches (the
-coarsening loop's matchings batch exactly like the band stages — one
-``match_batch`` dispatch per ELL bucket per wave, with the host-side
-coarse builds grouped in between).  The left/right subgraphs of every
-dissection are independent (paper §3.1) — exactly the parallelism the
-paper spreads over processes, here spread over the lanes of a batched
-kernel dispatch.  ``distributed_nested_dissection`` funnels its deferred
-sequential subtrees through ``order_batch`` too, so the endgames of every
-ND branch share these waves.
+subproblem's kernels on its own.  The scheduler instead expresses every
+request's whole ND recursion as ONE work-yielding task tree
+(``_nd_node_task`` — leaves, component splits and the separator-ordering
+host steps inline, subtrees spawned as sibling tasks) and submits all
+requests to a shared ``service.router.WaveRouter``.  Every router wave
+gathers the outstanding matching / BFS / FM work of every live subtree
+of every request and executes it bucketed — one vmap dispatch per ELL
+bucket per wave, with lanes from different *requests* stacking into the
+same launch.  The left/right subgraphs of every dissection are
+independent (paper §3.1) — exactly the parallelism the paper spreads
+over processes, here spread over the lanes of a batched kernel dispatch.
+``distributed_order_batch`` funnels the deferred sequential subtrees of
+ALL its requests through one ``order_batch`` call too, so the endgames
+of every ND branch of every ordering share these waves.
 
-Work items run the same computation whether batched or not, and the tree
-bookkeeping mirrors ``core.nd._nd_rec`` exactly (same seeds, same fold
-arithmetic, same fallbacks) — so ``order_batch`` returns permutations
-identical to looped ``nested_dissection`` calls.
+Work items run the same computation whether batched or not, the helpers
+(``leaf_perm`` / ``resolve_separator`` / ``split_by_separator`` /
+``separator_perm``) are pure per-subgraph, and ``Ordering.assemble``
+sorts fragments by start — so ``order_batch`` returns permutations
+identical to looped ``nested_dissection`` calls regardless of wave
+composition.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional, Sequence, Union
+from typing import List, Sequence, Union
 
 import numpy as np
 
+from repro import obs
+from repro.core.dnd import _Spawn
 from repro.core.graph import Graph
 from repro.core.nd import (NDConfig, child_nprocs, child_seeds,
                            component_seed, effective_nproc, leaf_perm,
                            resolve_separator, separator_perm,
                            separator_task, split_by_separator)
 from repro.core.ordering import Ordering
-from repro.service.batch import drive_tasks
-
-
-@dataclasses.dataclass
-class _Node:
-    """One pending ND tree node of one request."""
-    req: int                        # request index
-    g: Graph
-    gids: np.ndarray
-    seed: int
-    nproc: int
-    node: object                    # OrderNode receiving this subtree
-    start: int
 
 
 def _as_list(x, n: int) -> list:
@@ -55,90 +46,87 @@ def _as_list(x, n: int) -> list:
     return [x] * n
 
 
+def _nd_node_task(g: Graph, gids: np.ndarray, seed: int, nproc: int,
+                  cfg: NDConfig, ordering: Ordering, node, start: int):
+    """One ND tree node as a router task: order ``g`` into ``ordering``.
+
+    Leaves and connected-component splits are handled inline on the
+    host plane; separators run through ``nd.separator_task`` (yielding
+    its device works to the router); the two separated halves spawn as
+    sibling subtasks, so all of a request's — and all concurrent
+    requests' — same-depth subproblems join the same waves.
+    """
+    if g.n <= cfg.leaf_size:
+        ordering.add_leaf(node, start, gids[leaf_perm(g, seed)])
+        return
+    comp = g.components()
+    ncomp = int(comp.max()) + 1
+    if ncomp > 1:                       # independent parts: no separator
+        subs = []
+        off = start
+        for c in range(ncomp):
+            sub, old = g.induced_subgraph(comp == c)
+            child = ordering.add_internal(node, off, sub.n)
+            subs.append(_nd_node_task(sub, gids[old],
+                                      component_seed(seed, c), nproc,
+                                      cfg, ordering, child, off))
+            off += sub.n
+        yield _Spawn(subs)
+        return
+    part = yield from separator_task(
+        g, seed, effective_nproc(g.n, nproc, cfg), cfg)
+    part = resolve_separator(g, seed, part, cfg)
+    if part is None:                    # could not split
+        ordering.add_leaf(node, start, gids[leaf_perm(g, seed)])
+        return
+    (g0, old0), (g1, old1), (gs, olds) = split_by_separator(g, part)
+    p0, p1 = child_nprocs(nproc)
+    s0, s1 = child_seeds(seed)
+    c0 = ordering.add_internal(node, start, g0.n)
+    c1 = ordering.add_internal(node, start + g0.n, g1.n)
+    sperm = separator_perm(gs, seed)
+    ordering.add_leaf(node, start + g0.n + g1.n, gids[olds[sperm]], "sep")
+    yield _Spawn([
+        _nd_node_task(g0, gids[old0], s0, p0, cfg, ordering, c0, start),
+        _nd_node_task(g1, gids[old1], s1, p1, cfg, ordering, c1,
+                      start + g0.n),
+    ])
+
+
 def order_batch(graphs: Sequence[Graph],
                 seeds: Union[int, Sequence[int]] = 0,
                 nprocs: Union[int, Sequence[int]] = 1,
-                cfgs: Union[NDConfig, Sequence[NDConfig], None] = None
+                cfgs: Union[NDConfig, Sequence[NDConfig], None] = None,
+                tags: Union[Sequence, None] = None
                 ) -> List[np.ndarray]:
-    """Order many graphs with bucketed breadth-first nested dissection.
+    """Order many graphs through one shared wave router.
 
     Returns one permutation per graph, identical to
-    ``[nested_dissection(g, seed, nproc, cfg) for ...]``.
+    ``[nested_dissection(g, seed, nproc, cfg) for ...]``.  ``tags``
+    (optional, one per graph) attribute each request's lanes in the
+    router's wave summaries — ``distributed_order_batch`` uses it to
+    keep its merged endgame attributed to the originating distributed
+    requests.
     """
+    from repro.service.router import WaveRouter
     from repro.util import enable_compile_cache
     enable_compile_cache()
     n_req = len(graphs)
     seeds = _as_list(seeds, n_req)
     nprocs = _as_list(nprocs, n_req)
     cfgs = _as_list(cfgs or NDConfig(), n_req)
+    if tags is not None:
+        assert len(tags) == n_req
     orderings = [Ordering(g.n) for g in graphs]
 
-    from repro import obs
-    frontier: List[_Node] = [
-        _Node(i, g, np.arange(g.n, dtype=np.int64), seeds[i], nprocs[i],
-              orderings[i].root, 0)
-        for i, g in enumerate(graphs)]
-
-    depth = 0
-    while frontier:
-        splitters: List[_Node] = []
-        # --- host-plane wave: leaves and component splits (cheap, serial)
-        work_list = list(frontier)
-        while work_list:
-            t = work_list.pop()
-            cfg = cfgs[t.req]
-            ordering = orderings[t.req]
-            if t.g.n <= cfg.leaf_size:
-                ordering.add_leaf(t.node, t.start,
-                                  t.gids[leaf_perm(t.g, t.seed)])
-                continue
-            comp = t.g.components()
-            ncomp = int(comp.max()) + 1
-            if ncomp > 1:               # independent parts: no separator
-                off = t.start
-                for c in range(ncomp):
-                    sub, old = t.g.induced_subgraph(comp == c)
-                    child = ordering.add_internal(t.node, off, sub.n)
-                    work_list.append(_Node(t.req, sub, t.gids[old],
-                                           component_seed(t.seed, c),
-                                           t.nproc, child, off))
-                    off += sub.n
-                continue
-            splitters.append(t)
-
-        # --- device-plane wave: every separator at this depth, bucketed
-        gens = [separator_task(t.g, t.seed,
-                               effective_nproc(t.g.n, t.nproc, cfgs[t.req]),
-                               cfgs[t.req])
-                for t in splitters]
-        with obs.span("sched:level", depth=depth, splitters=len(gens)):
-            parts = drive_tasks(gens)
-        depth += 1
-
-        # --- split into the next depth's frontier
-        nxt: List[_Node] = []
-        for t, part in zip(splitters, parts):
-            cfg = cfgs[t.req]
-            ordering = orderings[t.req]
-            part = resolve_separator(t.g, t.seed, part, cfg)
-            if part is None:            # could not split
-                ordering.add_leaf(t.node, t.start,
-                                  t.gids[leaf_perm(t.g, t.seed)])
-                continue
-            (g0, old0), (g1, old1), (gs, olds) = \
-                split_by_separator(t.g, part)
-            p0, p1 = child_nprocs(t.nproc)
-            s0, s1 = child_seeds(t.seed)
-            c0 = ordering.add_internal(t.node, t.start, g0.n)
-            nxt.append(_Node(t.req, g0, t.gids[old0], s0, p0,
-                             c0, t.start))
-            c1 = ordering.add_internal(t.node, t.start + g0.n, g1.n)
-            nxt.append(_Node(t.req, g1, t.gids[old1], s1, p1,
-                             c1, t.start + g0.n))
-            sperm = separator_perm(gs, t.seed)
-            ordering.add_leaf(t.node, t.start + g0.n + g1.n,
-                              t.gids[olds[sperm]], "sep")
-        frontier = nxt
+    router = WaveRouter()
+    with obs.span("sched:batch", requests=n_req):
+        for i, g in enumerate(graphs):
+            root = _nd_node_task(g, np.arange(g.n, dtype=np.int64),
+                                 seeds[i], nprocs[i], cfgs[i],
+                                 orderings[i], orderings[i].root, 0)
+            router.submit(root, tag=i if tags is None else tags[i])
+        router.run()
 
     perms = []
     for g, ordering in zip(graphs, orderings):

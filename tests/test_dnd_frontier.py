@@ -99,7 +99,8 @@ STACK_SCRIPT = textwrap.dedent("""
                                    distributed_matching_stacked,
                                    halo_exchange_stacked, instrument)
     from repro.core.dnd import (DBFSWork, DHaloWork, DMatchWork,
-                                _execute_one, _execute_wave)
+                                _execute_one)
+    from repro.service.router import execute_wave
     from repro.graphs import generators as G
 
     out = {}
@@ -146,7 +147,7 @@ STACK_SCRIPT = textwrap.dedent("""
         works.append(DBFSWork(d, (vec(d, i) % 3 == 0).astype(np.int32), 3))
         works.append(DMatchWork(d, seed=7 + i))
     with instrument() as ins:
-        wave_out, summary = _execute_wave(works)
+        wave_out, summary = execute_wave(works)
     single_out = [_execute_one(w) for w in works]
     out["wave_parity"] = bool(all(
         np.array_equal(a, b) for a, b in zip(wave_out, single_out)))
@@ -156,13 +157,17 @@ STACK_SCRIPT = textwrap.dedent("""
     out["budget_ok"] = bool(all(
         summary["launches"][k] == summary["buckets"][k] <= summary["works"][k]
         for k in summary["launches"]))
-    # matching gathers 3 dense buffers per round (unmatched halo +
-    # proposal targets + proposal weights): the grant gather-back of the
-    # pre-frontier protocol is gone, measured by the words counter
+    # matching gathers 3 buffers per round (unmatched halo + proposal
+    # targets + proposal weights): the grant gather-back of the
+    # pre-frontier protocol is gone, measured by the words counter.
+    # ``words_dense`` books the uncompacted cost; the compact proposal
+    # gather (cap > 0) must only ever shrink it.
     m_launches = [l for l in ins.launches if l["kind"] == "dmatch"]
     out["match_words_ok"] = bool(all(
-        l["words"] == l["rounds"] * 3 * l["lanes_pad"] * l["nparts"]
-        * l["bucket"][0] for l in m_launches))
+        l["words_dense"] == l["rounds"] * 3 * l["lanes_pad"] * l["nparts"]
+        * l["bucket"][0] and l["words"] <= l["words_dense"]
+        and (l["cap"] > 0) == (l["words"] < l["words_dense"])
+        for l in m_launches))
     out["n_match_launches"] = len(m_launches)
     print(json.dumps(out))
 """)

@@ -187,13 +187,16 @@ def test_tracing_bit_parity_and_summary_coverage(tmp_path):
     spans = obs.load_chrome(path)
     _tree_check(spans)
     names = {s.name for s in spans}
-    assert {"session", "sched:level", "sched:round"} <= names
+    assert {"session", "sched:batch", "router:wave"} <= names
     assert any(n.startswith("dispatch:") for n in names)
+    # every router wave attributes its originating requests
+    assert all("requests" in s.attrs for s in spans
+               if s.name == "router:wave")
     # the session root span covers the run: >= 95% of wall-clock
     # attributed, the acceptance bar CI re-checks on the bench trace
     assert trace_summary.coverage(spans) >= 0.95
     out = trace_summary.render(spans)
-    assert "sched:level" in out and "dispatch:" in out
+    assert "router:wave" in out and "dispatch:" in out
     assert trace_summary.main([path, "--min-coverage", "0.95"]) == 0
 
 
@@ -275,13 +278,14 @@ _DIST_SCRIPT = textwrap.dedent("""
         "perm_ok": bool(np.array_equal(np.sort(ref), np.arange(g.n))),
         "all_equal": bool(all(np.array_equal(ref, p)
                               for p in perms.values())),
-        "has_wave": "wave" in names,
+        "has_wave": "router:wave" in names,
         "has_dnd": "dnd" in names,
         "dispatch_kinds": sorted({s.name for s in tr.spans
                                   if s.name.startswith("dispatch:")}),
         "wave_attrs_ok": bool(all(
             "level" in s.attrs and "works" in s.attrs
-            for s in tr.spans if s.name == "wave")),
+            and "requests" in s.attrs
+            for s in tr.spans if s.name == "router:wave")),
     }
     print(json.dumps(out))
 """)
