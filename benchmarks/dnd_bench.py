@@ -16,9 +16,12 @@ jax initializes).  Emits ``BENCH_dnd.json``:
     frontier driver is accountable for (launch latency used to grow with
     tree width; lane-stacking caps per-wave launches at the bucket
     count, asserted ≤ the bound the CI spmd job also re-checks).  The
-    two ratio endpoints are min-of-2 steady-state timings — virtual
-    devices oversubscribe small CPU runners, so single samples are too
-    noisy to gate on;
+    two ratio endpoints are min-of-3 timings with the first sample
+    discarded as warmup — virtual devices oversubscribe small CPU
+    runners and the cold sample carries compile/cache-load, so
+    min-of-2 still swung ~1.7x; ``timing_jitter`` (and
+    ``timing_jitter_fm`` for the gated FM stage) track the residual
+    post-warmup swing;
   * ``launches_by_level`` (per graph): the frontier driver's per-wave
     outstanding works / shape buckets / collective launches by kind,
     with ``launch_budget_ok`` asserting launches == buckets on every
@@ -127,6 +130,7 @@ def _bench() -> None:
     match_words_dense = 0
     budget_ok = True
     timing_jitter = 1.0
+    timing_jitter_fm = 1.0
     for name, g in graphs.items():
         perm_h = nested_dissection(g, seed=0, nproc=8)
         opc_h = nnz_opc(g, perm_h)[1]
@@ -134,31 +138,44 @@ def _bench() -> None:
         for p in DEVICE_COUNTS:
             dg = distribute(g, p)
             # the endpoints of the gated p8/p1 ratio are timed as the
-            # min of two runs: virtual host devices oversubscribe small
-            # CPU runners, so single samples swing ~1.7x run-to-run —
-            # the second (in-process-warm) run measures the steady-state
-            # dispatch cost the frontier claim is about, with compile
-            # amortized by the persistent cache
-            reps = 2 if p in (min(DEVICE_COUNTS), max(DEVICE_COUNTS)) \
+            # min of THREE runs with the first discarded as warmup:
+            # virtual host devices oversubscribe small CPU runners, so
+            # min-of-2 endpoint samples still swung ~1.7x run-to-run
+            # (the first sample carries compile / cache-load, e.g.
+            # grid2d-24 t_p8 10.8 vs 2.4).  The steady-state reps
+            # measure the dispatch cost the frontier claim is about
+            reps = 3 if p in (min(DEVICE_COUNTS), max(DEVICE_COUNTS)) \
                 else 1
             samples = []
+            fm_rep_s = []
             for rep in range(reps):
                 t0 = time.perf_counter()
                 with instrument() as ins_rep:
                     perm_d = distributed_nested_dissection(dg, seed=0)
                 samples.append(time.perf_counter() - t0)
+                fm_rep_s.append(ins_rep.stage_s.get("fm", 0.0))
                 if rep == 0:
                     ins = ins_rep
-            dt = min(samples)
+            steady = samples[1:] if len(samples) > 2 else samples
+            dt = min(steady)
             wall[p] += dt
             entry[f"t_p{p}_s"] = round(dt, 3)
             # raw samples stay in the artifact so the gated p8/p1 ratio
             # is debuggable when a CI runner swings; timing_jitter is
-            # the worst max/min swing over the min-of-2 endpoints
+            # the worst max/min swing over the post-warmup endpoint
+            # samples (the warmup sample is recorded but not gated on)
             entry[f"t_p{p}_samples"] = [round(s, 3) for s in samples]
-            if len(samples) > 1:
+            if len(steady) > 1:
                 timing_jitter = max(timing_jitter,
-                                    max(samples) / max(min(samples), 1e-9))
+                                    max(steady) / max(min(steady), 1e-9))
+            # FM-section jitter, tracked separately: the fm stage gate
+            # below compares against a wall-clock baseline, so its own
+            # run-to-run swing must be visible in the artifact
+            if p == max(DEVICE_COUNTS) and len(fm_rep_s) > 2:
+                fm_steady = fm_rep_s[1:]
+                timing_jitter_fm = max(
+                    timing_jitter_fm,
+                    max(fm_steady) / max(min(fm_steady), 1e-9))
             if p == max(DEVICE_COUNTS):
                 opc_d = nnz_opc(g, perm_d)[1]
                 entry["opc_dnd"] = opc_d
@@ -273,6 +290,7 @@ def _bench() -> None:
         "wallclock_s": {str(p): round(wall[p], 3) for p in DEVICE_COUNTS},
         "p8_over_p1": round(p8_over_p1, 3),
         "timing_jitter": round(timing_jitter, 3),
+        "timing_jitter_fm": round(timing_jitter_fm, 3),
         # every stage decomposed into first-call compile (trace + lower
         # + XLA compile or persistent-cache load) vs steady-state
         # dispatch, split by jit-cache-key first use (DESIGN.md §6);
@@ -303,15 +321,20 @@ def _bench() -> None:
         "frontier wave launched more collectives than shape buckets"
     # lane-stacking caps per-wave launches at the bucket count, so the
     # wall-clock must stop growing with virtual device count the way the
-    # depth-first driver's did: its baseline ratio was 3.03x (42.3s ->
-    # 128.3s).  Measured frontier ratios: ~1.7x cold-compile-cache,
-    # ~2.5x warm (a warm cache speeds p=1 more than the
-    # collective-bound p=8).  The gate sits below the depth-first
-    # baseline with noise margin; the tracked number lives in the
-    # artifact
-    assert p8_over_p1 <= 2.75, (
+    # depth-first driver's did (pre-frontier baseline: 3.03x).  The
+    # fused FM pass loop re-based this ratio: it removed most of the
+    # p=1 wall (18.8s -> 3.5s steady across the workload) while the
+    # p=8 endpoint stays dominated by shard_map collective overhead on
+    # oversubscribed virtual devices, so the same absolute overhead now
+    # divides a much smaller denominator (measured 6.2x here vs 1.9x
+    # pre-fusion — p=8 absolute wall IMPROVED 36.1s -> 21.9s).  The
+    # structural per-sibling-launch regression is asserted directly by
+    # the launch-budget checks above; this bound (measured 6.2x, jitter
+    # <= 1.3x) only catches wholesale launch-growth blowups
+    assert p8_over_p1 <= 7.5, (
         f"p=8 wall-clock is {p8_over_p1:.2f}x p=1 — frontier batching "
-        "regressed toward per-sibling launch growth (baseline 3.03x)")
+        "regressed toward per-sibling launch growth "
+        "(post-fusion baseline 6.2x)")
     # the router acceptance gates: concurrent == sequential bit-for-bit,
     # with strictly fewer collective launches and real cross-request
     # sharing
@@ -329,6 +352,16 @@ def _bench() -> None:
         f"{band['conflicts_by_round']}")
     assert ratio_mean <= 1.03, (
         f"distributed ND mean OPC ratio {ratio_mean:.3f} > 1.03 vs host")
+    # the fused-FM acceptance gate: the on-device pass loop (plus the
+    # bucket merge from dropping the max_moves sub-bucket) must at
+    # least halve the p=8 FM stage versus the pre-fusion baseline.
+    # 69.334 is the committed stage_s.fm.total_s of the PR 7 artifact
+    # (cold rep: compile 31.571 + dispatch 37.763 on the same
+    # 8-virtual-device CPU runner class this bench targets)
+    fm_total = stage_s.get("fm", 0.0)
+    assert fm_total <= 0.55 * 69.334, (
+        f"stage_s.fm {fm_total:.1f}s > 0.55x the 69.334s pre-fusion "
+        "baseline — the fused FM pass loop regressed")
 
 
 if __name__ == "__main__":

@@ -459,8 +459,11 @@ def _sharded_band_task(dg: DGraph, part_sh: np.ndarray, keep_sh: np.ndarray,
     globally exact and leaves the phase with **zero** cross-shard 0–1
     conflicts — checked as an invariant each phase.  All shard
     fragments of a phase are yielded as ONE ``FMWork`` list (bucketed
-    into one ``fm_refine_multi`` dispatch; under the frontier driver the
-    list batches with every other live band refinement of the wave), and
+    into one fused-FM kernel dispatch — ``kernels.fm_fused``, mode
+    switch ``REPRO_FM_MODE``; under the frontier driver the list batches
+    with every other live band refinement of the wave, regardless of the
+    fragments' per-lane move budgets since ``max_moves`` left the bucket
+    key), and
     one halo exchange per phase both verifies the invariant and feeds
     the next phase — the same per-round exchange budget as the legacy
     schedule.

@@ -13,9 +13,12 @@ slightly different solution spaces" — is a ``vmap`` over independent
 instances.  Since the service PR, the batch axis is a flat *lane* axis that
 may mix instances of *different* graphs padded to the same ELL bucket: the
 ordering service gathers band-FM work from every ND node at the same depth
-and executes one ``fm_refine_multi`` dispatch per shape bucket (DESIGN.md
-§3).  Per-lane results are independent of batch composition, so bucketed
-execution is bit-compatible with one-work-at-a-time execution.
+and executes one batched dispatch per shape bucket (DESIGN.md §3) — by
+default the fused on-device pass loop (``kernels.fm_fused``), with this
+module's ``fm_refine_multi`` as the bit-identical hoisted reference path
+(``REPRO_FM_MODE``).  Per-lane results are independent of batch
+composition, so bucketed execution is bit-compatible with
+one-work-at-a-time execution.
 """
 from __future__ import annotations
 
@@ -29,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.fm_fused import fm_move_loop as _fm_pass
 from repro.util import pow2 as _pow2    # shared bucketing: one definition
 
 NEG_INF = -jnp.inf
@@ -38,89 +42,9 @@ BIG_NOISE = 1e9
 # --------------------------------------------------------------------- #
 # device data plane
 # --------------------------------------------------------------------- #
-def _fm_pass(nbrs, valid, vwgt_f, locked, eps_abs, part, pulled0, pulled1,
-             w0, w1, ws, bpart, bws, bimb, noise, pert, max_moves,
-             pos_only: bool = False):
-    """One FM pass (a bounded sequence of moves) on a single lane."""
-    n, d = nbrs.shape
-
-    def move_cond(carry):
-        i, alive, *_ = carry
-        return (i < max_moves) & alive
-
-    def move_body(carry):
-        """One FM move.  ``pulled0/1`` are maintained incrementally:
-        selection is O(n) vector ops, the update is O(d²) scatters —
-        (beyond-paper optimization vs the naive O(n·d) gain recompute)."""
-        (i, alive, part, moved, pulled0, pulled1,
-         w0, w1, ws, bpart, bws, bimb) = carry
-        gain0 = vwgt_f - pulled0
-        gain1 = vwgt_f - pulled1
-        # --- feasibility (balance after move)
-        imb = jnp.abs(w0 - w1)
-        imb0 = jnp.abs((w0 + vwgt_f) - (w1 - pulled0))
-        imb1 = jnp.abs((w0 - pulled1) - (w1 + vwgt_f))
-        feas0 = imb0 <= jnp.maximum(eps_abs, imb)
-        feas1 = imb1 <= jnp.maximum(eps_abs, imb)
-        movable = (part == 2) & ~moved & ~locked
-        amp = jnp.where(i < pert, BIG_NOISE, 1e-3)
-        ok0, ok1 = movable & feas0, movable & feas1
-        if pos_only:                    # ParMETIS-style strict improvement
-            ok0, ok1 = ok0 & (gain0 > 0), ok1 & (gain1 > 0)
-        s0 = jnp.where(ok0, gain0 + noise[0] * amp, NEG_INF)
-        s1 = jnp.where(ok1, gain1 + noise[1] * amp, NEG_INF)
-        scores = jnp.concatenate([s0, s1])
-        idx = jnp.argmax(scores)
-        ok = scores[idx] > NEG_INF
-        side = (idx >= n).astype(jnp.int8)
-        v = (idx % n).astype(jnp.int32)
-        # --- apply (masked; no-op when not ok)
-        nv = nbrs[v]                                        # (d,)
-        nvalid = valid[v]
-        pull_slot = nvalid & (part[nv] == (1 - side)) & ok  # pulled set ⊆ N(v)
-        pulled_w = jnp.sum(jnp.where(pull_slot, vwgt_f[nv], 0.0))
-        # part updates
-        tgt_pull = jnp.where(pull_slot, nv, n)
-        part = part.at[tgt_pull].set(jnp.int8(2), mode="drop")
-        part = part.at[v].set(jnp.where(ok, side, part[v]))
-        # pulled0/1 updates from v's side change (v: 2 -> side)
-        tgt_v = jnp.where(nvalid & ok, nv, n)
-        dv_w = vwgt_f[v]
-        pulled0 = pulled0.at[tgt_v].add(
-            jnp.where(side == 1, dv_w, 0.0), mode="drop")
-        pulled1 = pulled1.at[tgt_v].add(
-            jnp.where(side == 0, dv_w, 0.0), mode="drop")
-        # pulled0/1 updates from the pulled set (u: 1-side -> 2)
-        rows = nbrs[nv]                                     # (d, d)
-        rvalid = valid[nv] & pull_slot[:, None]
-        tgt_u = jnp.where(rvalid, rows, n).reshape(-1)
-        amt = jnp.broadcast_to(vwgt_f[nv][:, None], rows.shape)
-        amt = jnp.where(rvalid, amt, 0.0).reshape(-1)
-        pulled0 = pulled0.at[tgt_u].add(
-            jnp.where(side == 0, -amt, 0.0), mode="drop")
-        pulled1 = pulled1.at[tgt_u].add(
-            jnp.where(side == 1, -amt, 0.0), mode="drop")
-        # weights
-        dv = jnp.where(ok, dv_w, 0.0)
-        w0 = w0 + jnp.where(side == 0, dv, 0.0) - jnp.where(side == 1, pulled_w, 0.0)
-        w1 = w1 + jnp.where(side == 1, dv, 0.0) - jnp.where(side == 0, pulled_w, 0.0)
-        ws = ws - dv + pulled_w
-        moved = moved.at[v].set(moved[v] | ok)
-        # --- best-seen tracking (feasible states only)
-        imb_new = jnp.abs(w0 - w1)
-        better = (ws < bws) & (imb_new <= jnp.maximum(eps_abs, bimb))
-        bpart = jnp.where(better, part, bpart)
-        bws = jnp.where(better, ws, bws)
-        bimb = jnp.where(better, jnp.minimum(imb_new, bimb), bimb)
-        return (i + 1, ok, part, moved, pulled0, pulled1,
-                w0, w1, ws, bpart, bws, bimb)
-
-    moved = jnp.zeros(n, bool)
-    carry = (jnp.int32(0), jnp.bool_(True), part, moved, pulled0,
-             pulled1, w0, w1, ws, bpart, bws, bimb)
-    carry = jax.lax.while_loop(move_cond, move_body, carry)
-    (_, _, part, _, _, _, w0, w1, ws, bpart, bws, bimb) = carry
-    return part, w0, w1, ws, bpart, bws, bimb
+# The per-lane move loop (``_fm_pass``) lives in ``kernels.fm_fused``:
+# it is shared verbatim between this hoisted path (vmapped below) and
+# the fused on-device pass loop, so the two cannot drift.
 
 
 def _pulled_jnp(nbrs, valid, vwgt_f, part):
@@ -189,6 +113,12 @@ def fm_refine_multi(nbr, vwgt, parts_init, locked, keys, eps_frac,
     f32; max_moves, n_pert (L,) int32.  Returns (parts, sep_w, imb) with
     leading lane axis.  The pass loop is hoisted out of the per-lane body
     so the O(L·n·d) gain recompute runs as ONE batched kernel per pass.
+
+    This is the *hoisted* reference path (``REPRO_FM_MODE=hoisted``);
+    the default production path is the fused on-device pass loop
+    (``kernels.fm_fused.fm_fused_multi``), bit-identical to this one —
+    the differential parity suite (``tests/test_fm_fused.py``) holds
+    both against the independent jnp oracle in ``kernels.ref``.
     """
     L, n, d = nbr.shape
     valid = nbr >= 0
@@ -235,15 +165,16 @@ class FMWork:
     and runs every work sharing a bucket in a single ``fm_refine_multi``
     dispatch (one lane per FM instance).
 
-    ``locked`` is *lane data*, not part of ``bucket_key``: works whose
-    locked masks differ (e.g. the per-phase boundary-color masks of the
-    sharded-band alternating schedule, ``dnd._sharded_band_task``) still
-    batch into one dispatch, because every lane's mask rides in as an
-    input array of the vmapped body — only shape-affecting fields
-    (padded n / d, the max_moves sub-bucket, passes, pos_only) key the
-    bucket.  A locked vertex cannot be *selected* for a move, but a
-    move may still *pull* it into the separator; schedulers that lock
-    remote-owned copies must propagate such pulls themselves.
+    ``locked`` and ``max_moves`` are *lane data*, not part of
+    ``bucket_key``: works whose locked masks or move budgets differ
+    (e.g. the per-phase boundary-color masks of the sharded-band
+    alternating schedule, ``dnd._sharded_band_task``) still batch into
+    one dispatch, because every lane's mask and budget ride in as input
+    arrays of the kernel — only fields that change the compiled program
+    (padded n / d, passes, pos_only) key the bucket.  A locked vertex
+    cannot be *selected* for a move, but a move may still *pull* it into
+    the separator; schedulers that lock remote-owned copies must
+    propagate such pulls themselves.
     """
     nbr: np.ndarray                     # (n, d) int32 ELL ids, -1 pad
     vwgt: np.ndarray                    # (n,) vertex weights
@@ -269,14 +200,16 @@ class FMWork:
             max_moves = 2 * sep_sz + 16
         return min(int(max_moves), n_pad, 4096)
 
-    def bucket_key(self) -> Tuple[int, int, int, int, bool]:
+    def bucket_key(self) -> Tuple[int, int, int, bool]:
         n, d = self.nbr.shape
-        # max_moves is sub-bucketed: the vmapped move loop runs to the max
-        # trip count over its lanes, so mixing small move budgets with
-        # large ones would serialize the small lanes behind the large.
-        return (_pow2(n), _pow2(max(d, 1), 8),
-                _pow2(self.effective_max_moves(), 32),
-                self.passes, self.pos_only)
+        # max_moves is adaptive per lane, NOT sub-bucketed: the fused
+        # kernel's grid runs one lane at a time, so each lane's move
+        # loop terminates at its own budget — mixing small budgets with
+        # large ones serializes nothing.  (The hoisted path's vmapped
+        # while_loop select-masks finished lanes, so per-lane results
+        # are budget-composition-independent there too.)  Fewer buckets
+        # ⇒ fewer compiles and wider lane stacks per dispatch.
+        return (_pow2(n), _pow2(max(d, 1), 8), self.passes, self.pos_only)
 
 
 @dataclasses.dataclass
@@ -333,7 +266,8 @@ def _select_best(w: FMWork, parts: np.ndarray, sep_w: np.ndarray,
 
 
 def execute_fm_works(works: Sequence[FMWork],
-                     gain_mode: Optional[str] = None
+                     gain_mode: Optional[str] = None,
+                     mode: Optional[str] = None
                      ) -> List[Tuple[np.ndarray, float, float]]:
     """Run FM works, one batched dispatch per (n_pad, d_pad) bucket.
 
@@ -341,15 +275,24 @@ def execute_fm_works(works: Sequence[FMWork],
     across its instances — exactly what ``refine_parts`` returns.  Lane
     results do not depend on which other works share the dispatch, so this
     is equivalent to (but much cheaper than) per-work execution.
+
+    ``mode`` picks the fused on-device pass loop vs the hoisted path
+    (default ``ops.fm_mode_default()``, i.e. ``REPRO_FM_MODE``); both
+    are bit-identical.  An explicit ``gain_mode`` without an explicit
+    ``mode`` forces the hoisted path — the gain backend only exists
+    there, and callers comparing gain backends mean to compare them.
     """
-    if gain_mode is None:
+    from repro.kernels.ops import fm_mode_default, fm_refine_batch
+    if mode is None:
+        mode = "hoisted" if gain_mode is not None else fm_mode_default()
+    if mode == "hoisted" and gain_mode is None:
         gain_mode = gain_mode_default()
     results: List[Optional[Tuple[np.ndarray, float, float]]] = \
         [None] * len(works)
     groups = defaultdict(list)
     for i, w in enumerate(works):
         groups[w.bucket_key()].append(i)
-    for (n_pad, d_pad, _mm, passes, pos_only), idxs in groups.items():
+    for (n_pad, d_pad, passes, pos_only), idxs in groups.items():
         lanes = [_prepare_lanes(works[i]) for i in idxs]
         counts = [ln.parts0.shape[0] for ln in lanes]
         L_real = sum(counts)
@@ -380,20 +323,26 @@ def execute_fm_works(works: Sequence[FMWork],
         from repro.core.dgraph import _note_launch
 
         def dispatch():
-            parts, sep_w, imb = fm_refine_multi(
+            parts, sep_w, imb = fm_refine_batch(
                 jnp.asarray(nbr_b), jnp.asarray(vw_b), jnp.asarray(parts_b),
                 jnp.asarray(lock_b), jnp.asarray(keys_b), jnp.asarray(eps_b),
                 jnp.asarray(mm_b), jnp.asarray(np_b), passes=passes,
-                pos_only=pos_only, gain_mode=gain_mode)
+                pos_only=pos_only, mode=mode, gain_mode=gain_mode)
             return np.asarray(parts), np.asarray(sep_w), np.asarray(imb)
 
+        # the compiled program does not depend on the lanes' move
+        # budgets (max_moves is traced lane data in both modes), so the
+        # jit key — which decides the compile/dispatch billing split —
+        # carries only program-shaping fields.  One dispatch:fm span
+        # covers all ``passes`` on-device passes of the bucket.
         parts, sep_w, imb = obs.timed_dispatch(
             "fm", "fm",
-            ("fm", n_pad, d_pad, _mm, passes, pos_only, gain_mode, L_pad),
-            dispatch, lanes=L_real, lanes_pad=L_pad,
-            bucket=(n_pad, d_pad, _mm, passes, pos_only))
+            ("fm", mode, n_pad, d_pad, passes, pos_only, gain_mode, L_pad),
+            dispatch, lanes=L_real, lanes_pad=L_pad, mode=mode,
+            max_moves=int(mm_b.max()),
+            bucket=(n_pad, d_pad, passes, pos_only))
         _note_launch("fm", 0, L_real, L_pad,
-                     (n_pad, d_pad, _mm, passes, pos_only), passes, 0)
+                     (n_pad, d_pad, passes, pos_only), passes, 0)
         off = 0
         for i, k in zip(idxs, counts):
             n = works[i].nbr.shape[0]

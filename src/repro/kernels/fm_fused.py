@@ -1,0 +1,254 @@
+"""Fused on-device FM pass loop (one Pallas kernel per bucket dispatch).
+
+The hoisted path (``core.fm.fm_refine_multi``) traces the pass loop in
+Python: each pass is a batched gain recompute plus a vmapped move loop,
+unrolled ``passes`` times into one XLA program.  This kernel puts the
+pass loop itself on device — grid ``(L,)``, one lane per FM instance,
+with the per-lane ``(part, w0, w1, best)`` state resident in VMEM across
+all passes:
+
+    HBM:   nbr[l]  vwgt[l]  part0[l]  locked[l]  noise[l]  scalars[l]
+             │ (Pallas grid pipeline: lane l+1's blocks stream in while
+             ▼  lane l computes — automatic double-buffering)
+    VMEM:  ┌────────────────────────────────────────────────┐
+           │ fori_loop over passes:                         │
+           │   gain recompute (take-based, O(n·d), local)   │
+           │   while_loop moves (select → apply → best)     │
+           │ state (part, pulled0/1, w0, w1, best) resident │
+           └────────────────────────────────────────────────┘
+             ▼
+    HBM:   bpart[l]  sep_w[l]  imb[l]
+
+Move budgets are **adaptive per lane**: ``max_moves`` rides in as lane
+data (an ``(L, 1)`` input), so each lane's move loop terminates at its
+own budget — lanes with small budgets are not serialized behind large
+ones, and ``FMWork.bucket_key`` no longer needs the pow2 ``max_moves``
+sub-bucket (fewer buckets ⇒ fewer compiles, wider lane stacks).
+
+Bit-parity contract: per-pass tiebreak noise is precomputed outside the
+kernel (``fm_noise``) with the exact op sequence of the hoisted path —
+``jax.random`` cannot run inside a Mosaic kernel — and every float sum
+here is over integer-valued float32 vertex weights, hence exact in any
+reduction order.  The kernel is therefore bit-identical to the hoisted
+path and to the jnp oracle (``kernels.ref.fm_fused_ref``), asserted
+across the bucketing space in ``tests/test_fm_fused.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -jnp.inf
+BIG_NOISE = 1e9
+
+
+def fm_move_loop(nbrs, valid, vwgt_f, locked, eps_abs, part, pulled0,
+                 pulled1, w0, w1, ws, bpart, bws, bimb, noise, pert,
+                 max_moves, pos_only: bool = False):
+    """One FM pass (a bounded sequence of moves) on a single lane.
+
+    The per-lane data-plane primitive shared by the hoisted path (under
+    ``jax.vmap`` in ``core.fm.fm_refine_multi``) and the fused kernel
+    (called per grid lane inside ``_fm_fused_kernel``) — one definition,
+    so the two paths cannot drift.
+    """
+    n, d = nbrs.shape
+
+    def move_cond(carry):
+        i, alive, *_ = carry
+        return (i < max_moves) & alive
+
+    def move_body(carry):
+        """One FM move.  ``pulled0/1`` are maintained incrementally:
+        selection is O(n) vector ops, the update is O(d²) scatters —
+        (beyond-paper optimization vs the naive O(n·d) gain recompute)."""
+        (i, alive, part, moved, pulled0, pulled1,
+         w0, w1, ws, bpart, bws, bimb) = carry
+        gain0 = vwgt_f - pulled0
+        gain1 = vwgt_f - pulled1
+        # --- feasibility (balance after move)
+        imb = jnp.abs(w0 - w1)
+        imb0 = jnp.abs((w0 + vwgt_f) - (w1 - pulled0))
+        imb1 = jnp.abs((w0 - pulled1) - (w1 + vwgt_f))
+        feas0 = imb0 <= jnp.maximum(eps_abs, imb)
+        feas1 = imb1 <= jnp.maximum(eps_abs, imb)
+        movable = (part == 2) & ~moved & ~locked
+        amp = jnp.where(i < pert, BIG_NOISE, 1e-3)
+        ok0, ok1 = movable & feas0, movable & feas1
+        if pos_only:                    # ParMETIS-style strict improvement
+            ok0, ok1 = ok0 & (gain0 > 0), ok1 & (gain1 > 0)
+        s0 = jnp.where(ok0, gain0 + noise[0] * amp, NEG_INF)
+        s1 = jnp.where(ok1, gain1 + noise[1] * amp, NEG_INF)
+        scores = jnp.concatenate([s0, s1])
+        idx = jnp.argmax(scores)
+        ok = scores[idx] > NEG_INF
+        side = (idx >= n).astype(part.dtype)
+        v = (idx % n).astype(jnp.int32)
+        # --- apply (masked; no-op when not ok)
+        nv = nbrs[v]                                        # (d,)
+        nvalid = valid[v]
+        pull_slot = nvalid & (part[nv] == (1 - side)) & ok  # pulled set ⊆ N(v)
+        pulled_w = jnp.sum(jnp.where(pull_slot, vwgt_f[nv], 0.0))
+        # part updates
+        tgt_pull = jnp.where(pull_slot, nv, n)
+        part = part.at[tgt_pull].set(2, mode="drop")
+        part = part.at[v].set(jnp.where(ok, side, part[v]))
+        # pulled0/1 updates from v's side change (v: 2 -> side)
+        tgt_v = jnp.where(nvalid & ok, nv, n)
+        dv_w = vwgt_f[v]
+        pulled0 = pulled0.at[tgt_v].add(
+            jnp.where(side == 1, dv_w, 0.0), mode="drop")
+        pulled1 = pulled1.at[tgt_v].add(
+            jnp.where(side == 0, dv_w, 0.0), mode="drop")
+        # pulled0/1 updates from the pulled set (u: 1-side -> 2)
+        rows = nbrs[nv]                                     # (d, d)
+        rvalid = valid[nv] & pull_slot[:, None]
+        tgt_u = jnp.where(rvalid, rows, n).reshape(-1)
+        amt = jnp.broadcast_to(vwgt_f[nv][:, None], rows.shape)
+        amt = jnp.where(rvalid, amt, 0.0).reshape(-1)
+        pulled0 = pulled0.at[tgt_u].add(
+            jnp.where(side == 0, -amt, 0.0), mode="drop")
+        pulled1 = pulled1.at[tgt_u].add(
+            jnp.where(side == 1, -amt, 0.0), mode="drop")
+        # weights
+        dv = jnp.where(ok, dv_w, 0.0)
+        w0 = w0 + jnp.where(side == 0, dv, 0.0) - jnp.where(side == 1, pulled_w, 0.0)
+        w1 = w1 + jnp.where(side == 1, dv, 0.0) - jnp.where(side == 0, pulled_w, 0.0)
+        ws = ws - dv + pulled_w
+        moved = moved.at[v].set(moved[v] | ok)
+        # --- best-seen tracking (feasible states only)
+        imb_new = jnp.abs(w0 - w1)
+        better = (ws < bws) & (imb_new <= jnp.maximum(eps_abs, bimb))
+        bpart = jnp.where(better, part, bpart)
+        bws = jnp.where(better, ws, bws)
+        bimb = jnp.where(better, jnp.minimum(imb_new, bimb), bimb)
+        return (i + 1, ok, part, moved, pulled0, pulled1,
+                w0, w1, ws, bpart, bws, bimb)
+
+    moved = jnp.zeros(n, bool)
+    carry = (jnp.int32(0), jnp.bool_(True), part, moved, pulled0,
+             pulled1, w0, w1, ws, bpart, bws, bimb)
+    carry = jax.lax.while_loop(move_cond, move_body, carry)
+    (_, _, part, _, _, _, w0, w1, ws, bpart, bws, bimb) = carry
+    return part, w0, w1, ws, bpart, bws, bimb
+
+
+def fm_noise(keys, n: int, passes: int) -> jax.Array:
+    """Per-pass tiebreak noise for all lanes: (L, passes, 2, n).
+
+    Exactly the key-split / uniform op sequence of the hoisted pass loop
+    (split once per pass, draw (2, n) from the subkey), hoisted out of
+    the kernel because ``jax.random`` cannot run inside Mosaic — values
+    are bit-identical to what ``fm_refine_multi`` draws per pass.
+    """
+    noises = []
+    for _ in range(passes):
+        both = jax.vmap(jax.random.split)(keys)             # (L, 2, 2)
+        keys, subs = both[:, 0], both[:, 1]
+        noises.append(jax.vmap(lambda k: jax.random.uniform(k, (2, n)))(subs))
+    return jnp.stack(noises, axis=1)
+
+
+def _fm_fused_kernel(nbr_ref, vwgt_ref, part_ref, locked_ref, noise_ref,
+                     eps_ref, mm_ref, np_ref, part_out, bws_out, bimb_out,
+                     *, passes, pos_only):
+    nbr = nbr_ref[0]                          # (n, d) int32, lane-resident
+    n, d = nbr.shape
+    valid = nbr >= 0
+    nbrs = jnp.where(valid, nbr, 0)
+    vwgt_f = vwgt_ref[0]                      # (n,) f32
+    locked = locked_ref[0] != 0
+    noise_all = noise_ref[0]                  # (passes, 2, n)
+    eps_abs = eps_ref[0, 0]                   # per-lane scalars ride as
+    max_moves = mm_ref[0, 0]                  # (1, 1) blocks (adaptive
+    n_pert = np_ref[0, 0]                     # budget = lane data)
+    part = part_ref[0]                        # (n,) int32
+
+    def sums(part):
+        w0 = jnp.sum(vwgt_f * (part == 0))
+        w1 = jnp.sum(vwgt_f * (part == 1))
+        ws = jnp.sum(vwgt_f * (part == 2))
+        return w0, w1, ws
+
+    w0, w1, ws = sums(part)
+    bpart, bws, bimb = part, ws, jnp.abs(w0 - w1)
+
+    def pass_body(p, carry):
+        part, w0, w1, ws, bpart, bws, bimb = carry
+        noise = jax.lax.dynamic_index_in_dim(noise_all, p, 0,
+                                             keepdims=False)   # (2, n)
+        pert = jnp.where(p == 0, n_pert, 0)    # perturb pass 1 only
+        # gain recompute, VMEM-local (same math as sep_gain_multi)
+        flat = nbrs.reshape(-1)
+        pn = jnp.take(part, flat, axis=0).reshape(nbr.shape)
+        wn = jnp.take(vwgt_f, flat, axis=0).reshape(nbr.shape)
+        wn = jnp.where(valid, wn, 0.0)
+        pulled0 = jnp.sum(wn * (pn == 1), axis=1)
+        pulled1 = jnp.sum(wn * (pn == 0), axis=1)
+        (part, w0, w1, ws, bpart, bws, bimb) = fm_move_loop(
+            nbrs, valid, vwgt_f, locked, eps_abs, part, pulled0, pulled1,
+            w0, w1, ws, bpart, bws, bimb, noise, pert, max_moves,
+            pos_only=pos_only)
+        part = bpart                           # revert to best
+        w0, w1, ws = sums(part)
+        return (part, w0, w1, ws, bpart, bws, bimb)
+
+    carry = (part, w0, w1, ws, bpart, bws, bimb)
+    carry = jax.lax.fori_loop(0, passes, pass_body, carry)
+    (part, w0, w1, ws, bpart, bws, bimb) = carry
+    part_out[0] = bpart
+    bws_out[0, 0] = bws
+    bimb_out[0, 0] = bimb
+
+
+@functools.partial(jax.jit, static_argnames=("passes", "pos_only",
+                                             "interpret"))
+def fm_fused_multi(nbr, vwgt, parts_init, locked, keys, eps_frac,
+                   max_moves, n_pert, passes: int = 3,
+                   pos_only: bool = False, interpret: bool = True):
+    """Fused FM over a flat lane axis — the on-device pass loop.
+
+    Same contract and shapes as ``core.fm.fm_refine_multi`` (L = lanes):
+    nbr (L, n, d) int32; vwgt (L, n); parts_init (L, n) int8; locked
+    (L, n) bool; keys (L, 2) uint32; eps_frac (L,) f32; max_moves,
+    n_pert (L,) int32.  Returns (parts int8, sep_w, imb), bit-identical
+    to the hoisted path.  The compiled program does not depend on
+    ``max_moves`` (traced lane data), so works with different budgets
+    share one executable.
+    """
+    L, n, d = nbr.shape
+    vwgt_f = vwgt.astype(jnp.float32)
+    eps_abs = eps_frac.astype(jnp.float32) * vwgt_f.sum(axis=1)
+    noise = fm_noise(keys, n, passes)                       # (L, passes, 2, n)
+    parts, bws, bimb = pl.pallas_call(
+        functools.partial(_fm_fused_kernel, passes=passes,
+                          pos_only=pos_only),
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((1, n, d), lambda l: (l, 0, 0)),
+            pl.BlockSpec((1, n), lambda l: (l, 0)),
+            pl.BlockSpec((1, n), lambda l: (l, 0)),
+            pl.BlockSpec((1, n), lambda l: (l, 0)),
+            pl.BlockSpec((1, passes, 2, n), lambda l: (l, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda l: (l, 0)),
+            pl.BlockSpec((1, 1), lambda l: (l, 0)),
+            pl.BlockSpec((1, 1), lambda l: (l, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda l: (l, 0)),
+            pl.BlockSpec((1, 1), lambda l: (l, 0)),
+            pl.BlockSpec((1, 1), lambda l: (l, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, n), jnp.int32),
+            jax.ShapeDtypeStruct((L, 1), jnp.float32),
+            jax.ShapeDtypeStruct((L, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(nbr, vwgt_f, parts_init.astype(jnp.int32),
+      locked.astype(jnp.int32), noise,
+      eps_abs[:, None], max_moves[:, None], n_pert[:, None])
+    return parts.astype(jnp.int8), bws[:, 0], bimb[:, 0]

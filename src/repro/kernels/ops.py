@@ -10,6 +10,7 @@ subproblems.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -18,10 +19,59 @@ import numpy as np
 from repro.kernels.band_batch import bfs_multi, sep_gain_multi
 from repro.kernels.diffusion import diffusion_step
 from repro.kernels.ell_spmv import ell_spmv
+from repro.kernels.fm_fused import fm_fused_multi
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def fm_mode_default() -> str:
+    """FM refinement path: REPRO_FM_MODE=fused|hoisted|auto.
+
+    ``fused`` runs the whole pass loop on device as one Pallas kernel
+    (``kernels.fm_fused``); ``hoisted`` is the pre-fusion reference path
+    (``core.fm.fm_refine_multi``: Python pass loop traced into one XLA
+    program, batched gain recompute per pass).  ``auto`` resolves to
+    ``fused`` on every backend — measured faster in both compile and
+    steady-state dispatch even under CPU interpret mode, and the two
+    paths are bit-identical (asserted in ``tests/test_fm_fused.py``).
+    """
+    mode = os.environ.get("REPRO_FM_MODE", "auto")
+    if mode == "auto":
+        return "fused"
+    return mode
+
+
+def fm_refine_batch(nbr, vwgt, parts_init, locked, keys, eps_frac,
+                    max_moves, n_pert, passes: int = 3,
+                    pos_only: bool = False, mode: str | None = None,
+                    gain_mode: str | None = None,
+                    interpret: bool | None = None):
+    """Batched FM refinement over a bucket's lane stack (mode-switched).
+
+    The single entry point ``core.fm.execute_fm_works`` dispatches
+    through — shapes as in ``fm_refine_multi``.  ``mode`` selects the
+    fused kernel vs the hoisted path (default ``fm_mode_default()``);
+    ``gain_mode`` only applies to the hoisted path's per-pass gain
+    recompute backend.  Both modes return bit-identical results.
+    """
+    if mode is None:
+        mode = fm_mode_default()
+    if mode == "fused":
+        if interpret is None:
+            interpret = _interpret_default()
+        return fm_fused_multi(nbr, vwgt, parts_init, locked, keys,
+                              eps_frac, max_moves, n_pert, passes=passes,
+                              pos_only=pos_only, interpret=interpret)
+    if mode != "hoisted":
+        raise ValueError(f"REPRO_FM_MODE={mode!r} not in fused|hoisted|auto")
+    from repro.core.fm import fm_refine_multi, gain_mode_default
+    if gain_mode is None:
+        gain_mode = gain_mode_default()
+    return fm_refine_multi(nbr, vwgt, parts_init, locked, keys, eps_frac,
+                           max_moves, n_pert, passes=passes,
+                           pos_only=pos_only, gain_mode=gain_mode)
 
 
 def ell_relax_step(nbr: jax.Array, dist_ext: jax.Array, big) -> jax.Array:

@@ -10,8 +10,12 @@ centralized ones).  This module is the merge (DESIGN.md §5): one
 trees and executes every wave through one stage table —
 
   * centralized work (``FMWork`` — bare or in per-phase lists —
-    ``BFSWork``, ``MatchWork``) runs through the bucketed vmap
-    executors, one dispatch per ELL bucket;
+    ``BFSWork``, ``MatchWork``) runs through the bucketed executors,
+    one dispatch per ELL bucket; FM buckets key on
+    ``(n_pad, d_pad, passes, pos_only)`` only — move budgets are
+    per-lane data of the fused pass-loop kernel (``kernels.fm_fused``),
+    so works with different ``max_moves`` stack into one launch and the
+    wave summaries count correspondingly fewer, wider fm buckets;
   * distributed work (``DMatchWork`` / ``DBFSWork`` / ``DHaloWork``)
     groups by ``dgraph_bucket`` (plus rounds / width / dtype) and each
     group runs as ONE lane-stacked ``shard_map`` launch, regardless of

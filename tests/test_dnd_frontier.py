@@ -9,6 +9,7 @@ import sys
 import textwrap
 
 import numpy as np
+import pytest
 
 
 # ------------------------------------------------------------------ #
@@ -263,3 +264,85 @@ def test_service_task_works_join_frontier_waves():
     kinds = set(out["kinds"])
     assert "match" in kinds or "fm" in kinds, \
         "no centralized works ever reached the frontier executor"
+
+
+# ------------------------------------------------------------------ #
+# fused vs hoisted FM: end-to-end permutation bit-parity
+# ------------------------------------------------------------------ #
+def _fm_mode_script(p_values, n_graphs: int) -> str:
+    """End-to-end REPRO_FM_MODE=fused vs hoisted parity: the full
+    ``distributed_order_batch`` pipeline must produce bit-identical
+    permutations under either FM path, across device counts and both
+    the frontier and depth-first drivers."""
+    return textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import numpy as np
+        from repro.core.dgraph import distribute
+        from repro.core.dnd import (DNDConfig, distributed_nested_dissection,
+                                    distributed_order_batch)
+        from repro.graphs import generators as G
+
+        out = {{}}
+        graphs = [G.grid2d(20, 20), G.grid3d(7, 7, 7)][:{n_graphs}]
+        seeds = [0, 5][:{n_graphs}]
+        # lowered thresholds: the sharded band path (and its per-phase
+        # FMWork batches) really executes, so the fused kernel is on
+        # the hot path of every run below
+        kw = dict(centralize_threshold=200, band_central_threshold=128)
+
+        def run_batch(P, mode):
+            os.environ["REPRO_FM_MODE"] = mode
+            dgs = [distribute(g, P) for g in graphs]
+            return distributed_order_batch(
+                dgs, seeds, [DNDConfig(**kw)] * len(dgs))
+
+        parity = {{}}
+        perms = None
+        for P in {list(p_values)}:
+            pf = run_batch(P, "fused")
+            ph = run_batch(P, "hoisted")
+            parity[str(P)] = bool(all(
+                np.array_equal(a, b) for a, b in zip(pf, ph)))
+            perms = pf
+        out["frontier_parity_by_p"] = parity
+        out["perm_ok"] = bool(all(
+            np.array_equal(np.sort(p), np.arange(g.n))
+            for p, g in zip(perms, graphs)))
+
+        # depth-first driver, p=8: same fused-vs-hoisted contract off
+        # the frontier path
+        dg = distribute(graphs[0], 8)
+        dfs = {{}}
+        for mode in ("fused", "hoisted"):
+            os.environ["REPRO_FM_MODE"] = mode
+            dfs[mode] = distributed_nested_dissection(
+                dg, seed=0, cfg=DNDConfig(frontier=False, **kw))
+        out["dfs_parity"] = bool(
+            np.array_equal(dfs["fused"], dfs["hoisted"]))
+        print(json.dumps(out))
+    """)
+
+
+def test_fm_mode_end_to_end_bit_parity_quick():
+    """Reduced-size default-run variant: one graph, P=4, both drivers."""
+    out = _run_script(_fm_mode_script((4,), n_graphs=1))
+    assert out["perm_ok"]
+    assert all(out["frontier_parity_by_p"].values()), \
+        f"fused ordering differs from hoisted: {out['frontier_parity_by_p']}"
+    assert out["dfs_parity"], \
+        "depth-first driver: fused ordering differs from hoisted"
+
+
+@pytest.mark.slow
+def test_fm_mode_end_to_end_bit_parity_full():
+    """The tentpole's end-to-end claim: REPRO_FM_MODE=fused vs hoisted
+    produce identical permutations for P ∈ {1, 4, 8}, both graphs, and
+    both the frontier and depth-first drivers (CI spmd job)."""
+    out = _run_script(_fm_mode_script((1, 4, 8), n_graphs=2))
+    assert out["perm_ok"]
+    assert all(out["frontier_parity_by_p"].values()), \
+        f"fused ordering differs from hoisted: {out['frontier_parity_by_p']}"
+    assert out["dfs_parity"], \
+        "depth-first driver: fused ordering differs from hoisted"
