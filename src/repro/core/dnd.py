@@ -1102,6 +1102,52 @@ def distributed_order_batch(dgs: List[DGraph], seeds=0, cfgs=None,
     return out
 
 
+def distributed_order_task(dg: DGraph, seed: int, cfg: DNDConfig,
+                           hints=None, rec=None):
+    """One distributed request as a single suspendable task tree.
+
+    The incremental (pump-driven) counterpart of
+    ``distributed_order_batch``: the whole request — top sharded
+    dissection AND its centralized endgame — is one composite generator
+    a service ``WaveRouter`` can park and resume at any wave boundary.
+    The endgame subtrees spawn as ``scheduler._nd_node_task`` siblings
+    the moment this request's top tree finishes, so they share waves
+    with whatever else is live on the router (the cross-request endgame
+    merge happens per-wave rather than in one deferred batch — same
+    per-lane computations, bit-identical orderings).
+
+    ``hints`` / ``rec`` carry the warm-start surface into the endgame:
+    each deferred subtree's splits are recorded under (and replayed
+    from) paths prefixed ``n<node-id>``, which are stable across
+    structurally identical runs because the deferred node ids are
+    determined by the recursion shape — and the recursion shape is
+    replayed from the same splits.  The sharded top-level separators
+    are not warm-started (their part vectors live sharded; see
+    DESIGN.md §7 invariants).
+
+    Returns the completed ``DistOrdering`` (assembly is the caller's —
+    the service assembles outside the router so parked requests never
+    block it).
+    """
+    from repro.service.scheduler import _nd_node_task
+    from repro.core.ordering import Ordering
+    dord = DistOrdering(dg.n_global, dg.nparts)
+    deferred: List[_Deferred] = []
+    yield _Spawn([_dnd_task(dg, shard_gids(dg), seed, cfg, dord,
+                            DistOrdering.root, deferred)])
+    if deferred:
+        orderings = [Ordering(d.g.n) for d in deferred]
+        yield _Spawn([
+            _nd_node_task(d.g, np.arange(d.g.n, dtype=np.int64), d.seed,
+                          d.nproc, cfg, o, o.root, 0, hints=hints,
+                          rec=rec, path=f"n{d.node}")
+            for d, o in zip(deferred, orderings)])
+        for d, o in zip(deferred, orderings):
+            perm = o.assemble()
+            dord.add_fragment(d.node, d.gids[perm], d.shard)
+    return dord
+
+
 def distributed_nested_dissection(dg: DGraph, seed: int = 0,
                                   cfg: Optional[DNDConfig] = None,
                                   return_tree: bool = False):

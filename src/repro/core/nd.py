@@ -66,14 +66,51 @@ def _project(part_coarse: np.ndarray, cmap: np.ndarray) -> np.ndarray:
 # ------------------------------------------------------------------ #
 # stage-separated separator pipeline
 # ------------------------------------------------------------------ #
-def separator_task(g: Graph, seed: int, nproc: int, cfg: NDConfig
+def valid_warm_part(g: Graph, part) -> Optional[np.ndarray]:
+    """Validate a cached split as a warm-start separator for ``g``.
+
+    A part vector recorded from a *different* graph's ordering tree is
+    a sound separator here iff it matches ``g``'s vertex count, leaves
+    both sides non-empty, and no 0–1 edge crosses it — all
+    topology-only properties, so any isomorphic-modulo-weights cache
+    neighbor's split qualifies while anything else (stale entry, hash
+    collision, divergent recursion shape) is rejected and the caller
+    runs the cold pipeline.  Returns the validated int8 part or None.
+    """
+    if part is None or len(part) != g.n:
+        return None
+    part = np.asarray(part, dtype=np.int8)
+    if min(int((part == 0).sum()), int((part == 1).sum())) == 0:
+        return None
+    src = np.repeat(np.arange(g.n), g.degrees())
+    # symmetric CSR: checking 0->1 arcs covers 1->0 too
+    if np.any((part[src] == 0) & (part[g.adjncy] == 1)):
+        return None
+    return part
+
+
+def separator_task(g: Graph, seed: int, nproc: int, cfg: NDConfig,
+                   warm_part: Optional[np.ndarray] = None
                    ) -> Generator[Work, object, Optional[np.ndarray]]:
     """Multilevel + band-FM separator pipeline as a work-yielding generator.
 
     Yields ``BFSWork`` / ``FMWork`` items; the driver sends back each
     result (``np.ndarray`` dist for BFS, ``(part, sep_w, imb)`` for FM).
     Returns the final part vector, or None when g is too small.
+
+    ``warm_part`` (optional) is a cached split from a structurally
+    identical graph's completed ordering tree (the warm-start index,
+    DESIGN.md §7): when it validates via ``valid_warm_part`` the task
+    returns it immediately — no coarsening, no initial separator, no
+    band FM — which is what makes a topology-modulo-weights cache
+    near-hit cost a fraction of a cold multilevel run (Holtgrewe/
+    Sanders/Schulz: reuse a prior solution as the multilevel starting
+    point).  An invalid hint falls through to the full cold pipeline.
     """
+    if warm_part is not None:
+        cached = valid_warm_part(g, warm_part)
+        if cached is not None:
+            return cached
     if g.n < 4:
         return None
     # matching works of the coarsening loop propagate to the driver too:

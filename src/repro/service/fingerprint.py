@@ -26,6 +26,42 @@ def graph_fingerprint(g: Graph) -> str:
     return h.hexdigest()
 
 
+def structural_fingerprint(g: Graph) -> str:
+    """Hash of the topology only (CSR structure *modulo weights*).
+
+    Two graphs share this fingerprint iff they have identical vertex
+    numbering and adjacency but possibly different vertex/edge weights
+    — the "isomorphic modulo weights" cache neighbors of the warm-start
+    index (``cache.WarmStartIndex``): their separator splits are
+    mutually valid, so one's finished ordering tree can seed the
+    other's recursion.  NOT a sound key for exact results (weights
+    change the ordering); exact serving always goes through
+    ``request_fingerprint``.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    for arr in (g.xadj, g.adjncy):
+        h.update(f"{arr.dtype}:{arr.shape}|".encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def dgraph_structural_fingerprint(dg) -> str:
+    """Topology-modulo-weights key of a sharded ``DGraph``.
+
+    Hashes the shard layout and adjacency (``vtxdist``, padded neighbor
+    table, ghost ids, per-shard valid counts) but neither edge nor
+    vertex weights — the distributed analogue of
+    ``structural_fingerprint``, keying warm-start reuse of a previous
+    ordering tree's centralized-endgame splits.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    for arr in (dg.vtxdist, dg.nbr_gst, dg.ghost_gid, dg.n_loc,
+                dg.n_ghost):
+        h.update(f"{arr.dtype}:{arr.shape}|".encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
 def request_fingerprint(g: Graph, seed: int, nproc: int,
                         cfg: NDConfig) -> str:
     """Cache key for a full ordering request."""

@@ -80,10 +80,19 @@ class RouterConfig:
         # bucketed lane-stacked wave (False is only meaningful through
         # the depth-first oracle, which bypasses the router entirely)
         self.frontier_waves = True
-        # reserved preemption surface for the SLO work: a wave executes
-        # at most this many works (None = unbounded; the only value the
-        # current executors implement)
+        # reserved finer-grained preemption surface: a wave executes at
+        # most this many works (None = unbounded; the implemented
+        # preemption granularity is whole waves via ``pump``)
         self.max_wave_works: Optional[int] = None
+
+        ########## SLO pump / preemption ##########
+        # default wave budget of one ``WaveRouter.pump`` call: how many
+        # waves a pump may execute before handing control back to the
+        # admission policy (the per-pump preemption budget — small
+        # requests submitted mid-flight wait at most this many waves
+        # before the policy can park a long ordering between waves)
+        self.pump_wave_budget = int(
+            os.environ.get("REPRO_PUMP_WAVES", "2"))
 
         ########## mesh / device groups ##########
         # device group serving distributed buckets; None = the default
@@ -291,6 +300,7 @@ class _Task:
     parent: Optional["_Task"]
     slot: int
     tag: object = None              # originating request (inherited)
+    reported: bool = False          # root surfaced by pop_completed()
     started: bool = False
     n_pending: int = 0
     child_results: List = dataclasses.field(default_factory=list)
@@ -352,6 +362,24 @@ class WaveRouter:
     results are bit-identical to driving each tree alone (or
     depth-first).  ``submit`` after a ``run`` is allowed: the router is
     reusable drain-to-drain.
+
+    **Preemption surface** (the SLO control plane, DESIGN.md §7):
+    ``pump(max_waves, select)`` advances the frontier by a *bounded*
+    number of waves, and each wave executes only the outstanding works
+    of the *selected* request tags — everything else stays **parked**:
+    the suspended generators keep their host state and their yielded
+    work descriptors verbatim, so a later pump resumes them
+    bit-identically (parking changes only wave composition, which the
+    lane-purity contract makes result-invariant).  New submits between
+    pumps simply join the frontier, which is what lets a small request
+    preempt a long ordering *between* waves.  ``run()`` is the
+    unbounded, select-everything special case.
+
+    Per-request execution attribution: every executed wave's wall clock
+    is split across the request tags that contributed works to it,
+    proportional to their work counts, and accumulated into
+    ``exec_s_by_tag`` — the service bills each request its own share of
+    the waves it actually rode, not the whole drain's wall.
     """
 
     def __init__(self, cfg: Optional[RouterConfig] = None):
@@ -360,6 +388,7 @@ class WaveRouter:
         self._roots: List[_Task] = []
         self._blocked: List[Tuple[_Task, object]] = []
         self._level = 0
+        self.exec_s_by_tag: Dict = defaultdict(float)
 
     def submit(self, gen, tag=None) -> int:
         """Register one task tree; returns its index into ``run()``."""
@@ -369,20 +398,67 @@ class WaveRouter:
         _advance(task, None, self._blocked)
         return idx
 
+    # -------------------------------------------------------------- #
+    def pump(self, max_waves: Optional[int] = None,
+             select=None) -> int:
+        """Advance the frontier by at most ``max_waves`` waves.
+
+        ``select`` (a container of tags, or None for all) gates which
+        blocked works may execute: works of unselected tags stay parked
+        — their generators are not resumed and their lane state is
+        untouched until a later pump selects them.  Returns the number
+        of waves executed (0 when nothing selected is blocked, so a
+        pump loop can detect quiescence).
+        """
+        waves = 0
+        while self._blocked and (max_waves is None or waves < max_waves):
+            if select is None:
+                active, parked = self._blocked, []
+            else:
+                active = [e for e in self._blocked if e[0].tag in select]
+                parked = [e for e in self._blocked
+                          if e[0].tag not in select]
+            if not active:
+                break
+            self._blocked = []
+            tags = [t.tag for t, _ in active]
+            results, summary = execute_wave(
+                [w for _, w in active], level=self._level, tags=tags)
+            summary["level"] = self._level
+            summary["parked"] = len(parked)
+            _dg._note_wave(summary)
+            # proportional wall attribution: each tag's share of this
+            # wave is its fraction of the executed works
+            share = summary["t_s"] / len(tags)
+            for tag in tags:
+                self.exec_s_by_tag[tag] += share
+            for (t, _), r in zip(active, results):
+                _advance(t, r, self._blocked)
+            self._blocked.extend(parked)
+            self._level += 1
+            waves += 1
+        return waves
+
+    def live_tags(self) -> List:
+        """Tags of submitted roots that have not finished yet."""
+        return [t.tag for t in self._roots if not t.done]
+
+    def pop_completed(self) -> List[Tuple[object, object]]:
+        """(tag, result) of roots completed since the last call.
+
+        Each root reports exactly once, in submission order — the
+        service maps tags back to in-flight requests and resolves them.
+        """
+        out = []
+        for t in self._roots:
+            if t.done and not t.reported:
+                t.reported = True
+                out.append((t.tag, t.result))
+        return out
+
     def run(self) -> List:
         """Drive all submitted trees to completion; results in order."""
-        while True:
-            blocked, self._blocked = self._blocked, []
-            if not blocked:
-                break
-            results, summary = execute_wave(
-                [w for _, w in blocked], level=self._level,
-                tags=[t.tag for t, _ in blocked])
-            summary["level"] = self._level
-            _dg._note_wave(summary)
-            for (t, _), r in zip(blocked, results):
-                _advance(t, r, self._blocked)
-            self._level += 1
+        self.pump()
         assert all(t.done for t in self._roots), \
             "router finished with live tasks"
         return [t.result for t in self._roots]

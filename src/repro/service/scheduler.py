@@ -47,7 +47,8 @@ def _as_list(x, n: int) -> list:
 
 
 def _nd_node_task(g: Graph, gids: np.ndarray, seed: int, nproc: int,
-                  cfg: NDConfig, ordering: Ordering, node, start: int):
+                  cfg: NDConfig, ordering: Ordering, node, start: int,
+                  hints=None, rec=None, path: str = ""):
     """One ND tree node as a router task: order ``g`` into ``ordering``.
 
     Leaves and connected-component splits are handled inline on the
@@ -55,6 +56,19 @@ def _nd_node_task(g: Graph, gids: np.ndarray, seed: int, nproc: int,
     its device works to the router); the two separated halves spawn as
     sibling subtasks, so all of a request's — and all concurrent
     requests' — same-depth subproblems join the same waves.
+
+    ``hints`` / ``rec`` thread the warm-start surface (DESIGN.md §7)
+    through the recursion: ``path`` names this node in the ND tree
+    (root ``""``, dissection children ``.0``/``.1``, components
+    ``.c<k>``); a hint at this path short-circuits the separator
+    pipeline through ``separator_task(warm_part=...)`` (re-validated on
+    ``g``, so stale hints fall back cold per node), and ``rec`` records
+    every *resolved* split so a completed tree can seed later
+    structurally identical requests.  Replaying the cached splits
+    reproduces the cached recursion shape on any same-topology graph —
+    induced subgraphs of equal structure under equal parts are equal
+    structures — so paths align between record and replay by
+    construction.
     """
     if g.n <= cfg.leaf_size:
         ordering.add_leaf(node, start, gids[leaf_perm(g, seed)])
@@ -69,16 +83,20 @@ def _nd_node_task(g: Graph, gids: np.ndarray, seed: int, nproc: int,
             child = ordering.add_internal(node, off, sub.n)
             subs.append(_nd_node_task(sub, gids[old],
                                       component_seed(seed, c), nproc,
-                                      cfg, ordering, child, off))
+                                      cfg, ordering, child, off,
+                                      hints, rec, f"{path}.c{c}"))
             off += sub.n
         yield _Spawn(subs)
         return
     part = yield from separator_task(
-        g, seed, effective_nproc(g.n, nproc, cfg), cfg)
+        g, seed, effective_nproc(g.n, nproc, cfg), cfg,
+        warm_part=None if hints is None else hints.get(path))
     part = resolve_separator(g, seed, part, cfg)
     if part is None:                    # could not split
         ordering.add_leaf(node, start, gids[leaf_perm(g, seed)])
         return
+    if rec is not None:
+        rec[path] = part
     (g0, old0), (g1, old1), (gs, olds) = split_by_separator(g, part)
     p0, p1 = child_nprocs(nproc)
     s0, s1 = child_seeds(seed)
@@ -87,10 +105,26 @@ def _nd_node_task(g: Graph, gids: np.ndarray, seed: int, nproc: int,
     sperm = separator_perm(gs, seed)
     ordering.add_leaf(node, start + g0.n + g1.n, gids[olds[sperm]], "sep")
     yield _Spawn([
-        _nd_node_task(g0, gids[old0], s0, p0, cfg, ordering, c0, start),
+        _nd_node_task(g0, gids[old0], s0, p0, cfg, ordering, c0, start,
+                      hints, rec, path + ".0"),
         _nd_node_task(g1, gids[old1], s1, p1, cfg, ordering, c1,
-                      start + g0.n),
+                      start + g0.n, hints, rec, path + ".1"),
     ])
+
+
+def request_task(g: Graph, seed: int, nproc: int, cfg: NDConfig,
+                 ordering: Ordering, hints=None, rec=None,
+                 path: str = ""):
+    """Root ND task of one host-graph request (the service pump's unit).
+
+    The service admits one of these per request onto its persistent
+    ``WaveRouter`` and assembles ``ordering`` once the root completes —
+    same task tree ``order_batch`` builds, exposed so admission can be
+    incremental (and warm-started / recorded via ``hints`` / ``rec``).
+    """
+    return _nd_node_task(g, np.arange(g.n, dtype=np.int64), seed, nproc,
+                         cfg, ordering, ordering.root, 0,
+                         hints=hints, rec=rec, path=path)
 
 
 def order_batch(graphs: Sequence[Graph],
@@ -122,9 +156,8 @@ def order_batch(graphs: Sequence[Graph],
     router = WaveRouter()
     with obs.span("sched:batch", requests=n_req):
         for i, g in enumerate(graphs):
-            root = _nd_node_task(g, np.arange(g.n, dtype=np.int64),
-                                 seeds[i], nprocs[i], cfgs[i],
-                                 orderings[i], orderings[i].root, 0)
+            root = request_task(g, seeds[i], nprocs[i], cfgs[i],
+                                orderings[i])
             router.submit(root, tag=i if tags is None else tags[i])
         router.run()
 

@@ -1,0 +1,257 @@
+"""SLO serving control plane: preemption parity, warm starts, deadlines.
+
+Host-plane tests run by default: the pump loop must park and resume
+orderings **bit-identically at every wave boundary** while new requests
+are admitted mid-flight, warm starts must validate / guard / fall back,
+and deadline + per-class accounting must be exact.  The distributed
+variant (a sharded ordering preempted between its waves by host
+requests) runs in a subprocess with 8 virtual devices (slow).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.nd import nested_dissection, valid_warm_part
+from repro.graphs import generators as G
+from repro.service import OrderingService
+from repro.service.fingerprint import structural_fingerprint
+from repro.service.sched_policy import PolicyConfig, SchedPolicy
+
+
+# ------------------------------------------------------------------ #
+# preempt/resume bit-parity with interleaved admissions (host plane)
+# ------------------------------------------------------------------ #
+def test_preempted_ordering_resumes_bit_identically():
+    """A long ordering parked at every wave boundary — while new small
+    requests are admitted, run and resolved — must produce the exact
+    permutation of an uninterrupted run (lane purity)."""
+    # make the s class preemptible so a 400-vertex "big" request keeps
+    # the test fast while still being parked behind xs arrivals
+    svc = OrderingService(policy=SchedPolicy(PolicyConfig(
+        preemptible=("s", "m", "l"))))
+    big_g = G.grid2d(20, 20)                    # n=400: class "s"
+    smalls = [G.grid2d(6 + i, 7) for i in range(4)]     # class "xs"
+    rid_big = svc.submit(big_g, seed=3, nproc=4, deadline_s=1000.0)
+
+    small_rids, order, i = [], [], 0
+    for _ in range(500):                        # pump-by-pump drive
+        if svc.poll(rid_big) is not None:
+            break
+        if i < len(smalls):                     # new admission at this
+            small_rids.append(                  # wave boundary
+                svc.submit(smalls[i], seed=i, nproc=1, deadline_s=1000.0))
+            i += 1
+        order.extend(sorted(svc.pump()))
+    assert svc.poll(rid_big) is not None, "pump loop did not terminate"
+
+    # bit-parity: preempted == uninterrupted, for everyone
+    assert np.array_equal(svc.poll(rid_big).perm,
+                          nested_dissection(big_g, seed=3, nproc=4))
+    for rid, g, seed in zip(small_rids, smalls, range(len(smalls))):
+        assert np.array_equal(svc.poll(rid).perm,
+                              nested_dissection(g, seed=seed, nproc=1))
+
+    # preemption actually happened: every small resolved while the big
+    # ordering was still in flight
+    assert small_rids and rid_big in order
+    assert max(order.index(r) for r in small_rids) < order.index(rid_big)
+
+    # per-request attribution (not whole-batch wall): the preempted
+    # ordering rode far more waves than any of the smalls it yielded to
+    big_exec = svc.poll(rid_big).exec_s
+    for rid in small_rids:
+        assert svc.poll(rid).exec_s < big_exec
+
+
+def test_pump_and_drain_on_empty_service():
+    svc = OrderingService()
+    assert svc.pump() == {}
+    assert svc.drain() == {}
+    assert svc.queue_depth() == 0
+
+
+# ------------------------------------------------------------------ #
+# warm starts: validation, replay, OPC guard
+# ------------------------------------------------------------------ #
+def test_valid_warm_part_topology_checks():
+    g = G.grid2d(8, 8)
+    # a proper row separator: rows 0-3 | row 4 (sep) | rows 5-7
+    part = np.zeros(g.n, dtype=np.int8)
+    part[4 * 8:5 * 8] = 2
+    part[5 * 8:] = 1
+    ok = valid_warm_part(g, part)
+    assert ok is not None and ok.dtype == np.int8
+    assert valid_warm_part(g, None) is None
+    assert valid_warm_part(g, part[:10]) is None        # wrong length
+    assert valid_warm_part(g, np.full(g.n, 2, np.int8)) is None  # empty side
+    bad = part.copy()
+    bad[0] = 1                                  # creates a 0-1 edge
+    assert valid_warm_part(g, bad) is None
+    naive = np.zeros(g.n, dtype=np.int8)        # index halves: edges cross
+    naive[g.n // 2:] = 1
+    assert valid_warm_part(g, naive) is None
+
+
+def test_warm_start_isomorphic_repeat():
+    """Same topology, different seed: the structural index warm-starts
+    the repeat from the recorded splits (or exact-falls-back)."""
+    svc = OrderingService(warm_starts=True)
+    g = G.grid2d(14, 14)
+    rid_cold = svc.submit(g, seed=0, nproc=2)
+    svc.drain()
+    cold = svc.poll(rid_cold)
+    assert not cold.warm and len(svc.warm) == 1
+
+    rid_warm = svc.submit(g, seed=5, nproc=2)
+    svc.drain()
+    warm = svc.poll(rid_warm)
+    assert np.array_equal(np.sort(warm.perm), np.arange(g.n))
+    st = svc.stats()
+    assert st["warm_hits"] == 1
+    if st["warm_fallbacks"] == 0:
+        # replay accepted: flagged warm and OPC-guarded vs the source
+        from repro.sparse.symbolic import nnz_opc
+        assert warm.warm
+        assert (nnz_opc(g, warm.perm)[1]
+                <= svc.warm_opc_ratio_max * nnz_opc(g, cold.perm)[1])
+    else:
+        # guard fired: exact-parity fallback
+        assert not warm.warm
+        assert np.array_equal(warm.perm,
+                              nested_dissection(g, seed=5, nproc=2))
+
+
+def test_warm_opc_guard_falls_back_to_exact():
+    svc = OrderingService(warm_starts=True)
+    g = G.grid2d(12, 12)
+    svc.submit(g, seed=0, nproc=2)
+    svc.drain()
+    sfp = structural_fingerprint(g)
+    tree = svc.warm.get(sfp)
+    assert tree is not None and tree.opc > 1.0
+    # poison the entry with an impossibly good recorded OPC: any replay
+    # now "degrades" and must fall back to the exact cold path
+    svc.warm.put(sfp, dict(tree.parts), opc=1.0, n=tree.n,
+                 source_fp="poison", replace=True)
+    rid = svc.submit(g, seed=9, nproc=2)
+    svc.drain()
+    res = svc.poll(rid)
+    assert svc.stats()["warm_fallbacks"] >= 1
+    assert not res.warm
+    assert np.array_equal(res.perm, nested_dissection(g, seed=9, nproc=2))
+
+
+def test_warm_off_by_default_keeps_determinism_contract():
+    svc = OrderingService()
+    assert svc.warm_starts is False
+    g = G.grid2d(10, 10)
+    svc.submit(g, seed=0)
+    svc.drain()
+    assert len(svc.warm) == 0               # not even recording
+
+
+# ------------------------------------------------------------------ #
+# deadlines + per-class stats
+# ------------------------------------------------------------------ #
+def test_deadline_accounting_and_per_class_stats():
+    svc = OrderingService()
+    rid_ok = svc.submit(G.grid2d(9, 9), seed=0, deadline_s=1000.0)
+    svc.drain()
+    assert svc.poll(rid_ok).deadline_missed is False
+    rid_late = svc.submit(G.grid2d(9, 10), seed=0, deadline_s=0.0)
+    svc.drain()
+    assert svc.poll(rid_late).deadline_missed is True
+    rid_none = svc.submit(G.grid2d(10, 10), seed=0)
+    svc.drain()
+    assert svc.poll(rid_none).deadline_missed is None
+
+    st = svc.stats()
+    xs = st["by_class"]["xs"]
+    assert xs["deadline_total"] == 2 and xs["deadline_misses"] == 1
+    assert xs["deadline_miss_rate"] == 0.5
+    assert st["deadline_miss_rate"] == 0.5
+    assert {"count", "p50_exec_ms", "p95_exec_ms", "p50_queue_wait_ms",
+            "p95_queue_wait_ms"} <= set(xs)
+    assert st["pumps"] >= 3 and st["inflight"] == 0
+
+
+# ------------------------------------------------------------------ #
+# distributed preempt/resume (subprocess, 8 virtual devices)
+# ------------------------------------------------------------------ #
+SLO_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    from repro.core.dgraph import distribute
+    from repro.core.dnd import DNDConfig, distributed_nested_dissection
+    from repro.core.nd import nested_dissection
+    from repro.graphs import generators as G
+    from repro.service import OrderingService
+    from repro.service.sched_policy import PolicyConfig, SchedPolicy
+
+    out = {}
+    kw = dict(centralize_threshold=150, band_central_threshold=96)
+    big_g = G.grid2d(16, 20)
+    dg = distribute(big_g, 8)
+    cfg = DNDConfig(**kw)
+    ref_big = distributed_nested_dissection(dg, seed=3, cfg=cfg)
+    smalls = [G.grid2d(6 + i, 7) for i in range(3)]
+    refs = [nested_dissection(g, seed=i, nproc=1)
+            for i, g in enumerate(smalls)]
+
+    svc = OrderingService(policy=SchedPolicy(PolicyConfig(
+        preemptible=("s", "m", "l"))))
+    rid_big = svc.submit_distributed(dg, seed=3, cfg=cfg,
+                                     deadline_s=1000.0)
+    rids, order, i = [], [], 0
+    for _ in range(500):
+        if svc.poll(rid_big) is not None:
+            break
+        if i < len(smalls):
+            rids.append(svc.submit(smalls[i], seed=i, nproc=1,
+                                   deadline_s=1000.0))
+            i += 1
+        order.extend(sorted(svc.pump()))
+    out["terminated"] = bool(svc.poll(rid_big) is not None)
+    out["big_parity"] = bool(np.array_equal(
+        svc.poll(rid_big).perm, ref_big))
+    out["small_parity"] = bool(all(
+        np.array_equal(svc.poll(r).perm, p)
+        for r, p in zip(rids, refs)))
+    out["smalls_before_big"] = bool(
+        rids and rid_big in order
+        and max(order.index(r) for r in rids) < order.index(rid_big))
+    out["attr_ok"] = bool(all(
+        svc.poll(r).exec_s < svc.poll(rid_big).exec_s for r in rids))
+    print(json.dumps(out))
+""")
+
+
+def _run_script(script: str, timeout: int = 560) -> dict:
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=timeout,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": os.environ.get("HOME", "/root"),
+                              "JAX_PLATFORMS": os.environ.get(
+                                  "JAX_PLATFORMS", "cpu")})
+    assert res.returncode == 0, res.stderr[-2000:]
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_distributed_ordering_preempted_by_host_requests():
+    out = _run_script(SLO_SCRIPT)
+    assert out["terminated"], "distributed pump loop did not terminate"
+    assert out["big_parity"], \
+        "preempted distributed ordering differs from uninterrupted run"
+    assert out["small_parity"], \
+        "host requests admitted mid-flight lost parity"
+    assert out["smalls_before_big"], \
+        "small requests did not preempt the distributed ordering"
+    assert out["attr_ok"], "exec attribution not per-request"
