@@ -17,6 +17,12 @@ Two SLO sections exercise the serving control plane (DESIGN.md §7):
   < 0.5x its cold run (replaying the cached separator tree) or fall
   back to the exact path.
 
+A **chaos** section (DESIGN.md §8; standalone via ``--chaos``) replays
+a request stream under a seeded ``FaultPlan`` and gates the recovery
+ladder: every request reaches a terminal status (zero hangs), every
+``ok`` permutation is bit-identical to the fault-free run, and the
+fingerprint cache holds zero faulted entries.
+
 Emits ``BENCH_service.json`` next to the CWD so the perf trajectory is
 tracked from this PR onward; the SLO gates are asserted *after* the
 artifact is written so a failed bound still leaves the numbers behind.
@@ -24,6 +30,7 @@ artifact is written so a failed bound still leaves the numbers behind.
 from __future__ import annotations
 
 import json
+import sys
 import time
 
 import numpy as np
@@ -32,6 +39,8 @@ from benchmarks.common import quick, row
 from repro.core.nd import nested_dissection
 from repro.graphs import generators as G
 from repro.service import OrderingService
+from repro.service import faults
+from repro.service.fingerprint import request_fingerprint
 from repro.sparse.symbolic import nnz_opc
 
 
@@ -184,6 +193,99 @@ def run_warm():
     return out
 
 
+def chaos_plan() -> faults.FaultPlan:
+    """The bench's seeded chaos schedule: one of every fault type, at
+    every site layer — dispatch raises, kernel corruption, result
+    corruption, a wave-level transient, and stragglers."""
+    return faults.FaultPlan(seed=11, specs=[
+        faults.FaultSpec(site="fm", kind="transient", rate=0.15, count=4),
+        faults.FaultSpec(site="fm", kind="nan", at=(2,)),
+        faults.FaultSpec(site="bfs", kind="delay", rate=0.1,
+                         delay_s=0.01, count=6),
+        faults.FaultSpec(site="wave", kind="transient", at=(1,)),
+        faults.FaultSpec(site="result", kind="corrupt_perm", at=(0,)),
+    ])
+
+
+def run_chaos():
+    """Fault-injected replay of a mixed stream (the chaos gate).
+
+    The same requests run fault-free first (the parity reference and
+    the jit warm-up), then again — new seeds, so nothing resolves from
+    the cache — under ``chaos_plan()``, plus a duplicate pair (failure
+    fan-out coverage) and two infeasible-deadline requests (the shed
+    rung).  Gates: 100% terminal statuses, ``ok`` ⇒ bit-identical,
+    cache clean.
+    """
+    graphs = [G.grid2d(14, 14), G.grid3d(6, 6, 6), G.grid2d(16, 12),
+              G.grid2d(13, 11), G.grid2d(12, 12), G.grid3d(5, 5, 6)]
+    seeds = [100 + k for k in range(len(graphs))]
+    refs = [nested_dissection(g, seed=s, nproc=2)
+            for g, s in zip(graphs, seeds)]
+
+    svc = OrderingService()
+    # estimate warm-up: one request per class so the feasibility check
+    # has measured exec percentiles to shed against
+    for g in (G.grid2d(10, 10), G.grid2d(18, 15)):
+        svc.submit(g, seed=0, nproc=2)
+    svc.drain()
+
+    t0 = time.perf_counter()
+    with faults.fault_injection(chaos_plan()) as inj:
+        rids = [svc.submit(g, seed=s, nproc=2)
+                for g, s in zip(graphs, seeds)]
+        dup_rids = [svc.submit(graphs[0], seed=seeds[0], nproc=2)
+                    for _ in range(2)]          # coalesced duplicates
+        shed_rids = [svc.submit(G.grid2d(15, 13 + k), seed=0, nproc=2,
+                                deadline_s=0.0) for k in range(2)]
+        svc.drain()
+    wall = time.perf_counter() - t0
+
+    all_rids = rids + dup_rids + shed_rids
+    assert all(svc.poll(r) is not None for r in all_rids), \
+        "chaos gate: a request hung without a terminal status"
+    statuses = [svc.poll(r).status for r in all_rids]
+    assert all(s in ("ok", "shed", "failed") for s in statuses)
+    ok_identical = True
+    for rid, ref in zip(rids + dup_rids, refs + [refs[0]] * 2):
+        res = svc.poll(rid)
+        if res.status == "ok":
+            ok_identical &= bool(np.array_equal(res.perm, ref))
+    assert ok_identical, \
+        "chaos gate: an ok result differs from the fault-free run"
+    cache_clean = True
+    for g, s, ref in zip(graphs, seeds, refs):
+        cached = svc.cache.get(request_fingerprint(
+            g, s, 2, svc.default_cfg))
+        if cached is not None:
+            cache_clean &= bool(np.array_equal(cached, ref))
+    assert cache_clean, "chaos gate: a faulted entry reached the cache"
+    assert inj.injected > 0, "chaos plan injected nothing (vacuous gate)"
+    assert all(svc.poll(r).status == "shed" for r in shed_rids), \
+        "infeasible-deadline requests were not shed"
+
+    st = svc.stats()
+    out = {
+        "n_requests": len(all_rids),
+        "wall_s": round(wall, 3),
+        "n_injected": inj.injected,
+        "injected_by": inj.snapshot(),
+        "terminal": {s: statuses.count(s)
+                     for s in ("ok", "shed", "failed")},
+        "ok_bit_identical": ok_identical,
+        "cache_clean": cache_clean,
+        "retries": st["fault_retries"],
+        "degraded": st["degraded"],
+        "isolations": st["router"]["isolations"],
+        "straggler_waves": st["router"]["straggler_waves"],
+    }
+    row("service/chaos", wall / len(all_rids) * 1e6,
+        injected=out["n_injected"], ok=out["terminal"]["ok"],
+        shed=out["terminal"]["shed"], failed=out["terminal"]["failed"],
+        retries=out["retries"], degraded=out["degraded"])
+    return out
+
+
 def main() -> None:
     uniq, stream = workload()
     # one warmup pass per path builds the jit caches both will reuse
@@ -221,6 +323,7 @@ def main() -> None:
 
     slo = run_slo()
     warm = run_warm()
+    chaos = run_chaos()
 
     out = {
         "n_requests": n_req,
@@ -246,6 +349,10 @@ def main() -> None:
         # the top-level mirrors are the keys CI's service-slo job gates
         "slo": slo,
         "warm": warm,
+        # fault-injected replay (run_chaos docstring): its hard gates
+        # are asserted inside the section; these keys are the recorded
+        # evidence (and what CI's chaos job reads)
+        "chaos": chaos,
         "p95_exec_ms_by_class": slo["p95_exec_ms_by_class"],
         "deadline_miss_rate": slo["deadline_miss_rate"],
         "opc": {k: float(v) for k, v in opc.items()},
@@ -270,5 +377,19 @@ def main() -> None:
         f"warm repeat cost {warm['cost_ratio']}x cold without fallback")
 
 
+def chaos_main() -> None:
+    """Standalone chaos gate (CI's ``chaos`` job): only the
+    fault-injected section, written to ``BENCH_service_chaos.json``."""
+    out = {"chaos": run_chaos(), "quick": quick()}
+    with open("BENCH_service_chaos.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print("# wrote BENCH_service_chaos.json "
+          f"({out['chaos']['n_injected']} faults injected, "
+          f"terminal={out['chaos']['terminal']})")
+
+
 if __name__ == "__main__":
-    main()
+    if "--chaos" in sys.argv:
+        chaos_main()
+    else:
+        main()

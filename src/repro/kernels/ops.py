@@ -53,8 +53,11 @@ def fm_refine_batch(nbr, vwgt, parts_init, locked, keys, eps_frac,
     The single entry point ``core.fm.execute_fm_works`` dispatches
     through — shapes as in ``fm_refine_multi``.  ``mode`` selects the
     fused kernel vs the hoisted path (default ``fm_mode_default()``);
-    ``gain_mode`` only applies to the hoisted path's per-pass gain
-    recompute backend.  Both modes return bit-identical results.
+    ``oracle`` is the independent jnp reference (``kernels.ref``) — the
+    recovery ladder's last kernel rung (DESIGN.md §8), sharing no code
+    with the other two.  ``gain_mode`` only applies to the hoisted
+    path's per-pass gain recompute backend.  All modes return
+    bit-identical results (asserted in ``tests/test_fm_fused.py``).
     """
     if mode is None:
         mode = fm_mode_default()
@@ -64,8 +67,21 @@ def fm_refine_batch(nbr, vwgt, parts_init, locked, keys, eps_frac,
         return fm_fused_multi(nbr, vwgt, parts_init, locked, keys,
                               eps_frac, max_moves, n_pert, passes=passes,
                               pos_only=pos_only, interpret=interpret)
+    if mode == "oracle":
+        from repro.kernels.fm_fused import fm_noise
+        from repro.kernels.ref import fm_fused_ref
+        nbr = jnp.asarray(nbr, jnp.int32)
+        vwgt = jnp.asarray(vwgt)
+        noise = fm_noise(jnp.asarray(keys), nbr.shape[1], passes)
+        eps_abs = jnp.asarray(eps_frac) * \
+            vwgt.astype(jnp.float32).sum(axis=1)
+        return fm_fused_ref(nbr, vwgt, jnp.asarray(parts_init),
+                            jnp.asarray(locked), noise, eps_abs,
+                            jnp.asarray(max_moves), jnp.asarray(n_pert),
+                            passes=passes, pos_only=pos_only)
     if mode != "hoisted":
-        raise ValueError(f"REPRO_FM_MODE={mode!r} not in fused|hoisted|auto")
+        raise ValueError(f"REPRO_FM_MODE={mode!r} not in "
+                         "fused|hoisted|oracle|auto")
     from repro.core.fm import fm_refine_multi, gain_mode_default
     if gain_mode is None:
         gain_mode = gain_mode_default()

@@ -8,9 +8,9 @@ over the same bus).
 from repro.obs.metrics import REGISTRY, MetricsCollector, Registry
 from repro.obs.tracer import (Span, Tracer, current, emit, enabled,
                               first_use, forget_use, load_chrome,
-                              register_collector, reset_seen_keys, span,
-                              timed_dispatch, tracing,
-                              unregister_collector)
+                              register_collector, reset_seen_keys,
+                              set_fault_hook, span, timed_dispatch,
+                              tracing, unregister_collector)
 
 # the default registry listens to every event for the life of the process
 _METRICS = MetricsCollector(REGISTRY)
@@ -19,6 +19,7 @@ register_collector(_METRICS)
 __all__ = [
     "REGISTRY", "MetricsCollector", "Registry", "Span", "Tracer",
     "current", "emit", "enabled", "first_use", "forget_use",
-    "load_chrome", "register_collector", "reset_seen_keys", "span",
-    "timed_dispatch", "tracing", "unregister_collector",
+    "load_chrome", "register_collector", "reset_seen_keys",
+    "set_fault_hook", "span", "timed_dispatch", "tracing",
+    "unregister_collector",
 ]

@@ -276,6 +276,23 @@ def span(name: str, **attrs):
 # ------------------------------------------------------------------ #
 # timed dispatch helper
 # ------------------------------------------------------------------ #
+# Fault-injection seam (DESIGN.md §8): the service's chaos harness
+# installs a wrapper here so every timed dispatch — the fm/bfs/match
+# bucketed executors and the dhalo/dbfs/dmatch stacked collectives —
+# is an injection boundary, without `core` ever importing the service
+# layer (the same inversion as dgraph's config setters).  The wrapper
+# is called as ``wrapper(kind, thunk) -> out``; None means pass-through.
+_FAULT_HOOK = None
+
+
+def set_fault_hook(fn):
+    """Install (or clear, with None) the dispatch fault hook; returns
+    the previous hook so scoped installers can restore it."""
+    global _FAULT_HOOK
+    prev, _FAULT_HOOK = _FAULT_HOOK, fn
+    return prev
+
+
 def timed_dispatch(stage: str, kind: str, jit_key: Tuple, thunk,
                    **attrs):
     """Run ``thunk`` as one traced device dispatch.
@@ -283,12 +300,15 @@ def timed_dispatch(stage: str, kind: str, jit_key: Tuple, thunk,
     Opens a ``dispatch:{kind}`` leaf span (attrs + ``compile`` flag),
     bills the elapsed wall-clock to ``stage`` via a ``stage`` event with
     the compile/dispatch phase decided by ``first_use(jit_key)``, and
-    returns the thunk's value.
+    returns the thunk's value.  When a fault hook is installed the
+    thunk runs through it (injected raises/delays/corruption happen
+    *inside* the dispatch span, where a real device fault would).
     """
     is_compile = first_use(jit_key)
+    hook = _FAULT_HOOK
     t0 = time.perf_counter()
     with span(f"dispatch:{kind}", compile=is_compile, **attrs):
-        out = thunk()
+        out = thunk() if hook is None else hook(kind, thunk)
     emit("stage", {"name": stage, "seconds": time.perf_counter() - t0,
                    "compile": is_compile})
     return out

@@ -63,12 +63,13 @@ from repro import obs
 from repro.core.graph import Graph
 from repro.core.nd import NDConfig
 from repro.core.ordering import Ordering
+from repro.service import faults
 from repro.service.cache import FingerprintCache, WarmStartIndex
 from repro.service.fingerprint import (dgraph_fingerprint,
                                        dgraph_structural_fingerprint,
                                        request_fingerprint,
                                        structural_fingerprint)
-from repro.service.router import WaveRouter
+from repro.service.router import TaskFailure, WaveRouter
 from repro.service.scheduler import request_task
 from repro.service.sched_policy import CLASS_ORDER, ReqMeta, SchedPolicy
 
@@ -87,10 +88,28 @@ def size_class(n: int) -> str:
     return "l"
 
 
+def _is_permutation(perm, n: int) -> bool:
+    """Rung 4's service-side gate: exactly the integers [0, n) once.
+
+    O(n) bincount check on every computed result — cheap next to the
+    ordering itself, and the last line of the never-cache-corrupt
+    invariant (``cache.put`` re-checks as defense in depth).
+    """
+    p = np.asarray(perm)
+    if p.ndim != 1 or p.shape[0] != n or not np.issubdtype(
+            p.dtype, np.integer):
+        return False
+    if n == 0:
+        return True
+    if p.min() < 0 or p.max() >= n:
+        return False
+    return bool((np.bincount(p, minlength=n) == 1).all())
+
+
 @dataclasses.dataclass
 class OrderResult:
     request_id: int
-    perm: np.ndarray
+    perm: Optional[np.ndarray]      # None unless ``status == "ok"``
     cached: bool                    # served from the fingerprint cache
     latency_s: float                # submit → resolve (wait + execution)
     queue_wait_s: float             # submit → admission (0 on cache hits)
@@ -99,6 +118,13 @@ class OrderResult:
     size_class: str = ""            # see ``size_class()``
     deadline_missed: Optional[bool] = None  # None: no deadline given
     warm: bool = False              # resolved via a warm-started tree
+    #: terminal status (DESIGN.md §8): every submitted request reaches
+    #: exactly one of ``ok`` (valid permutation), ``shed`` (deadline
+    #: infeasible — never started), ``failed`` (recovery ladder
+    #: exhausted) — there is no fourth state and no silent hang
+    status: str = "ok"
+    retries: int = 0                # transient retries billed to this fp
+    degraded: bool = False          # kernel path degraded below default
 
 
 @dataclasses.dataclass
@@ -133,6 +159,7 @@ class _Admission:
     reqs: List                      # coalesced _PendingReq / _PendingDistReq
     struct_fp: str                  # topology-modulo-weights key
     n: int
+    fault_readmits: int = 0         # cold re-admissions after failures
 
 
 @dataclasses.dataclass
@@ -206,6 +233,14 @@ class OrderingService:
         self._n_warm_fallbacks = 0
         self._drain_time_s = 0.0
         self._n_drained = 0
+        #: terminal-status counters (every request ends in exactly one)
+        self._n_shed = 0
+        self._n_failed = 0
+        self._n_retries = 0
+        self._n_degraded = 0
+        # chaos harness: REPRO_FAULT_PLAN installs a process-global
+        # injector once (no-op when unset or already active)
+        faults.maybe_install_from_env()
         # submit / poll / stats run on the caller's thread while pumps
         # may run on a worker: every mutation of the queues, result map
         # and latency deques happens under this lock.  RLock because the
@@ -338,7 +373,13 @@ class OrderingService:
                 queued = [adm.meta for cls in CLASS_ORDER
                           for adm in self._queues[cls].values()]
                 inflight = [f.adm.meta for f in self._inflight.values()]
-                plan = self.policy.plan(queued, inflight, t0)
+                # measured per-class exec medians feed the policy's
+                # deadline-feasibility check (ladder rung 5)
+                est = {cls: float(np.percentile(np.asarray(dq), 50))
+                       for cls, dq in self._execs_by_class.items()
+                       if len(dq)}
+                plan = self.policy.plan(queued, inflight, t0,
+                                        exec_est=est)
                 adms = []
                 for tag in plan.admit:
                     for cls in CLASS_ORDER:
@@ -346,6 +387,24 @@ class OrderingService:
                         if adm is not None:
                             adms.append(adm)
                             break
+                shed_adms = []
+                for tag in plan.shed:
+                    for cls in CLASS_ORDER:
+                        adm = self._queues[cls].pop(tag, None)
+                        if adm is not None:
+                            shed_adms.append(adm)
+                            break
+                for adm in shed_adms:
+                    with obs.span("recover:shed", tag=adm.fp[:16],
+                                  size_class=adm.meta.size_class):
+                        pass
+                    for req in adm.reqs:
+                        resolved[req.request_id] = self._resolve(
+                            req.request_id, None, False, req.t_submit,
+                            adm.fp,
+                            queue_wait=max(0.0, t0 - req.t_submit),
+                            exec_s=0.0, n=adm.n, deadline=req.deadline,
+                            status="shed")
                 self._n_pumps += 1
             obs.REGISTRY.inc("repro_service_pumps_total")
             if plan.parked:
@@ -427,15 +486,38 @@ class OrderingService:
                 warm_used=hints is not None)
 
     def _finish(self, fp: str, result) -> Dict[int, OrderResult]:
-        """Resolve one completed fingerprint (or fall back cold)."""
+        """Resolve one completed fingerprint — or recover.
+
+        Before anything resolves ``ok`` the result passes rung 4's
+        validation gates: an excised tree (``TaskFailure``) or a failing
+        assembly goes to ``_fail_or_readmit``; the assembled permutation
+        is checked for validity (after the ``result``-site injection
+        point), and warm starts keep their OPC guard.  A corrupt result
+        is **never** written to the fingerprint cache and **never**
+        resolves ``ok`` — it re-runs cold or fans out ``failed``.
+        """
         resolved: Dict[int, OrderResult] = {}
         with self._lock:
             inflight = self._inflight.pop(fp)
             adm = inflight.adm
             exec_s = (inflight.exec_acc
                       + self._router.exec_s_by_tag.pop(fp, 0.0))
+            if isinstance(result, TaskFailure):
+                return self._fail_or_readmit(fp, inflight, exec_s,
+                                             result.error)
             t_chk = time.perf_counter()
-            perm = inflight.assemble(result)
+            try:
+                perm = inflight.assemble(result)
+            except Exception as err:
+                return self._fail_or_readmit(fp, inflight, exec_s, err)
+            inj = faults.active()
+            if inj is not None:
+                perm = inj.corrupt_result(fp, perm)
+            if not _is_permutation(perm, adm.n):
+                return self._fail_or_readmit(
+                    fp, inflight, exec_s, faults.CorruptResult(
+                        f"assembled result for {fp[:16]} is not a "
+                        f"permutation of [0, {adm.n})"))
             if inflight.warm_used and adm.kind == "host":
                 # OPC guard: a warm-started tree must match the recorded
                 # quality of its source (OPC is structure+perm only, so
@@ -467,14 +549,46 @@ class OrderingService:
                 else:
                     opc = -1.0
                 self.warm.put(adm.struct_fp, inflight.rec, opc, adm.n, fp)
+            retries, degraded = self._router.recovery.pop_tag(fp)
             for k, req in enumerate(adm.reqs):
                 res = self._resolve(
                     req.request_id, perm, k > 0, req.t_submit, fp,
                     queue_wait=max(0.0, inflight.t_admit - req.t_submit),
                     exec_s=exec_s, n=adm.n, deadline=req.deadline,
-                    warm=inflight.warm_used)
+                    warm=inflight.warm_used, retries=retries,
+                    degraded=degraded)
                 resolved[req.request_id] = res
             self._n_computed += 1
+        return resolved
+
+    def _fail_or_readmit(self, fp: str, inflight: _Inflight,
+                         exec_s: float, error: BaseException
+                         ) -> Dict[int, OrderResult]:
+        """Ladder rung 3's service half: one failed/invalid computation
+        re-admits **cold** through the normal queue path (the warm
+        fallback's shape) up to ``max_readmits`` times; past the budget
+        every coalesced rider — queued or in flight — resolves
+        ``status=failed`` so none can hang in ``poll()``.
+        """
+        adm = inflight.adm
+        if adm.fault_readmits < self._router.recovery.cfg.max_readmits:
+            adm.fault_readmits += 1
+            obs.REGISTRY.inc("repro_service_readmits_total")
+            with obs.span("recover:readmit", tag=fp[:16],
+                          error=type(error).__name__,
+                          attempt=adm.fault_readmits):
+                pass
+            self._admit(adm, inflight.t_admit, cold=True)
+            self._inflight[fp].exec_acc = exec_s
+            return {}
+        retries, degraded = self._router.recovery.pop_tag(fp)
+        resolved: Dict[int, OrderResult] = {}
+        for req in adm.reqs:
+            resolved[req.request_id] = self._resolve(
+                req.request_id, None, False, req.t_submit, fp,
+                queue_wait=max(0.0, inflight.t_admit - req.t_submit),
+                exec_s=exec_s, n=adm.n, deadline=req.deadline,
+                status="failed", retries=retries, degraded=degraded)
         return resolved
 
     # ------------------------------------------------------------------ #
@@ -528,6 +642,11 @@ class OrderingService:
                 "warm_hits": self._n_warm_hits,
                 "warm_fallbacks": self._n_warm_fallbacks,
                 "warm_size": len(self.warm),
+                "shed": self._n_shed,
+                "failed": self._n_failed,
+                "fault_retries": self._n_retries,
+                "degraded": self._n_degraded,
+                "router": self._router.stats(),
                 **pcts(self._latencies, "latency"),
                 **pcts(self._queue_waits, "queue_wait"),
                 **pcts(self._execs, "exec"),
@@ -542,23 +661,49 @@ class OrderingService:
             }
 
     # ------------------------------------------------------------------ #
-    def _resolve(self, rid: int, perm: np.ndarray, cached: bool,
+    def _resolve(self, rid: int, perm: Optional[np.ndarray],
+                 cached: bool,
                  t_submit: float, fp: str, queue_wait: float = 0.0,
                  exec_s: Optional[float] = None,
                  n: Optional[int] = None,
                  deadline: Optional[float] = None,
-                 warm: bool = False) -> OrderResult:
+                 warm: bool = False, status: str = "ok",
+                 retries: int = 0,
+                 degraded: bool = False) -> OrderResult:
         t_now = time.perf_counter()
         lat = t_now - t_submit
         if exec_s is None:              # cache hit: the lookup IS the work
             exec_s = lat
         cls = size_class(n) if n is not None else ""
-        missed = None if deadline is None else bool(t_now > deadline)
+        # shed/failed requests never count against SLO compliance (they
+        # have their own terminal accounting) nor into the latency/exec
+        # percentiles that feed the feasibility estimator
+        missed = (None if deadline is None or status != "ok"
+                  else bool(t_now > deadline))
         res = OrderResult(rid, perm, cached, lat, float(queue_wait),
-                          float(exec_s), fp, cls, missed, warm)
+                          float(exec_s), fp, cls, missed, warm,
+                          status, int(retries), bool(degraded))
         self._results[rid] = res
         while len(self._results) > self._result_capacity:
             self._results.popitem(last=False)
+        self._n_retries += int(retries)
+        self._n_degraded += bool(degraded)
+        if status != "ok":
+            if status == "shed":
+                self._n_shed += 1
+                obs.REGISTRY.inc("repro_service_shed_total",
+                                 size_class=cls)
+            else:
+                self._n_failed += 1
+                obs.REGISTRY.inc("repro_service_failed_total",
+                                 size_class=cls)
+            tracer = obs.current()
+            if tracer is not None:
+                tracer.add_span("request", t_submit, t_now,
+                                attrs={"rid": rid, "status": status,
+                                       "fingerprint": fp[:16],
+                                       "size_class": cls})
+            return res
         self._latencies.append(lat)
         self._queue_waits.append(float(queue_wait))
         self._execs.append(float(exec_s))

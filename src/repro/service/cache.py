@@ -55,6 +55,16 @@ class FingerprintCache:
         # Freeze a private copy: np.asarray aliases an existing ndarray, so
         # setflags on it would freeze the *caller's* array in place.
         perm = np.array(perm, copy=True)
+        # Never-cache-corrupt invariant (DESIGN.md §8): the service
+        # validates before calling, but a cache serves every future
+        # duplicate — re-check here so no caller can poison it.
+        n = perm.shape[0] if perm.ndim == 1 else -1
+        if (perm.ndim != 1 or not np.issubdtype(perm.dtype, np.integer)
+                or (n and not (np.bincount(
+                    perm.clip(0, max(n - 1, 0)), minlength=n) == 1).all())
+                or (n and (perm.min() < 0 or perm.max() >= n))):
+            raise ValueError(
+                f"refusing to cache a non-permutation for {key[:16]}")
         perm.setflags(write=False)
         if key in self._d:
             self._d.move_to_end(key)

@@ -59,6 +59,8 @@ from repro.core.dgraph import (dgraph_bucket, distributed_bfs_stacked,
                                halo_exchange_stacked)
 from repro.core.dnd import DBFSWork, DHaloWork, DMatchWork, _Spawn
 from repro.core.fm import FMWork, execute_fm_works
+from repro.service import faults as _faults
+from repro.train.fault import StragglerMonitor
 
 
 # ------------------------------------------------------------------ #
@@ -114,6 +116,16 @@ class RouterConfig:
         self.match_compact = os.environ.get(
             "REPRO_MATCH_COMPACT", "1") != "0"
 
+        ########## robustness (DESIGN.md §8) ##########
+        # straggler flagging: a wave slower than this factor × the
+        # running wave-time EWMA is counted in ``WaveRouter.stats()``
+        # and ``repro_router_straggler_waves_total`` (the router-side
+        # adoption of train/fault.py's StragglerMonitor contract); the
+        # factor is loose by default because compile waves legitimately
+        # dwarf steady-state waves
+        self.straggler_factor = float(
+            os.environ.get("REPRO_STRAGGLER_FACTOR", "4.0"))
+
     def apply(self) -> None:
         """Push the data-plane knobs down into ``core/dgraph``.
 
@@ -148,8 +160,162 @@ def work_kind(work) -> str:
     raise TypeError(f"unknown work kind: {type(work).__name__}")
 
 
+# ------------------------------------------------------------------ #
+# recovery ladder (DESIGN.md §8) — rungs 1–3 live at the wave level
+# ------------------------------------------------------------------ #
+#: the kernel-path degrade ladder (rung 2): every rung is bit-identical
+#: (tests/test_fm_fused.py), so degrading trades only speed for
+#: independence from the suspect code path — fused Pallas kernel →
+#: hoisted per-pass XLA loop → pure-jnp oracle (kernels.ref)
+_FM_MODES = ("fused", "hoisted", "oracle")
+
+
+def _fm_base_level() -> int:
+    """Ladder level of the process-default FM mode (REPRO_FM_MODE)."""
+    from repro.kernels.ops import fm_mode_default
+    mode = fm_mode_default()
+    return _FM_MODES.index(mode) if mode in _FM_MODES else 0
+
+
+class _WorkFailed:
+    """Sentinel result of ONE work whose dispatch failed beyond the
+    ladder — co-riding works of the same wave keep their real results."""
+    __slots__ = ("error",)
+
+    def __init__(self, error: BaseException):
+        self.error = error
+
+
+class TaskFailure:
+    """Terminal result of an excised task tree: the root was removed
+    from the frontier after its work failed beyond the ladder.  The
+    service resolves (or cold-readmits) its riders; ``run()`` re-raises
+    for non-service callers."""
+    __slots__ = ("error",)
+
+    def __init__(self, error: BaseException):
+        self.error = error
+
+    def __repr__(self):
+        return f"TaskFailure({self.error!r})"
+
+
+def _failure_of(result) -> Optional[BaseException]:
+    """The failure carried by one wave result (list works fail if any
+    of their slots failed), or None for a clean result."""
+    if isinstance(result, _WorkFailed):
+        return result.error
+    if isinstance(result, list):
+        for r in result:
+            if isinstance(r, _WorkFailed):
+                return r.error
+    return None
+
+
+class _Recovery:
+    """Per-router recovery state: retry budgets (rung 1), the sticky
+    per-request kernel degrade level (rung 2), and isolation counters
+    (rung 3's group→singleton split).  Degrade is keyed by request tag —
+    never process-global: co-riders of an un-degraded request keep the
+    fast path, and ``pop_tag`` hands the per-request totals to the
+    service for ``OrderResult.retries`` / ``.degraded``."""
+
+    def __init__(self, cfg: Optional[_faults.RecoveryConfig] = None):
+        self.cfg = cfg or _faults.RecoveryConfig()
+        self.base_level = _fm_base_level()
+        self.degrade_by_tag: Dict = {}
+        self.retries_by_tag: Dict = defaultdict(int)
+        self.isolations = 0
+
+    def level_of(self, tag) -> int:
+        return self.degrade_by_tag.get(tag, self.base_level)
+
+    def note_retry(self, kind: str, tags, attempt: int) -> None:
+        """Bill one transient retry and sleep its capped backoff."""
+        obs.REGISTRY.inc("repro_service_retries_total", kind=kind)
+        for tg in set(tags):
+            if tg is not None:
+                self.retries_by_tag[tg] += 1
+        with obs.span("recover:retry", kind=kind, attempt=attempt):
+            time.sleep(self.cfg.backoff(attempt))
+
+    def retry_loop(self, kind: str, tags, run):
+        """Rung 1: re-run transient failures with capped backoff; any
+        other failure (or an exhausted budget) escalates to the caller."""
+        attempt = 0
+        while True:
+            try:
+                return run()
+            except Exception as err:
+                if not (_faults.is_transient(err)
+                        and attempt < self.cfg.max_retries):
+                    raise
+                attempt += 1
+                self.note_retry(kind, tags, attempt)
+
+    def note_degrade(self, tags, level: int, err: BaseException) -> None:
+        obs.REGISTRY.inc("repro_service_degraded_total",
+                         mode=_FM_MODES[level])
+        for tg in set(tags):
+            if tg is not None:
+                self.degrade_by_tag[tg] = max(self.level_of(tg), level)
+        with obs.span("recover:degrade", mode=_FM_MODES[level],
+                      error=type(err).__name__):
+            pass
+
+    def note_isolate(self, kind: str, tags, err: BaseException) -> None:
+        self.isolations += 1
+        with obs.span("recover:isolate", kind=kind,
+                      error=type(err).__name__):
+            pass
+
+    def pop_tag(self, tag) -> Tuple[int, bool]:
+        """(retries, degraded) accumulated for one finished request."""
+        retries = int(self.retries_by_tag.pop(tag, 0))
+        degraded = (self.degrade_by_tag.pop(tag, self.base_level)
+                    > self.base_level)
+        return retries, degraded
+
+
+def _validate_fm_outs(works: Sequence[FMWork], outs) -> None:
+    """Rung 4's kernel-side half: a selected FM result must be finite
+    with in-range parts, else the wave treats the dispatch as failed
+    (``CorruptResult``) and the ladder degrades — so NaN-corrupted
+    outputs take the same recovery path as raised faults."""
+    for w, (part, sep_w, imb) in zip(works, outs):
+        p = np.asarray(part)
+        if (not np.isfinite(sep_w) or not np.isfinite(imb)
+                or (p.size and (p.min() < 0 or p.max() > 2))):
+            raise _faults.CorruptResult(
+                f"fm output failed validation (sep_w={sep_w!r}, "
+                f"parts in [{p.min() if p.size else 0}, "
+                f"{p.max() if p.size else 0}])")
+
+
+def _fm_ladder(rec: _Recovery, works: Sequence[FMWork], tags,
+               level: int):
+    """Run one FM group with retry (rung 1) + degrade (rung 2): on a
+    non-transient failure or invalid output, step the mode ladder and
+    re-dispatch; raises only once the oracle rung itself fails."""
+    lv = max(level, rec.base_level)
+    while True:
+        mode = _FM_MODES[lv]
+        try:
+            outs = rec.retry_loop(
+                "fm", tags, lambda: execute_fm_works(works, mode=mode))
+            _validate_fm_outs(works, outs)
+            return outs
+        except Exception as err:
+            if lv + 1 >= len(_FM_MODES):
+                raise
+            lv += 1
+            rec.note_degrade(tags, lv, err)
+
+
 def execute_wave(works: List, level: Optional[int] = None,
-                 tags: Optional[Sequence] = None) -> Tuple[List, dict]:
+                 tags: Optional[Sequence] = None,
+                 recovery: Optional[_Recovery] = None
+                 ) -> Tuple[List, dict]:
     """Execute one wave of mixed works, bucketed + lane-stacked.
 
     Centralized works (``FMWork`` — bare or in per-phase lists —
@@ -171,6 +337,15 @@ def execute_wave(works: List, level: Optional[int] = None,
     buckets / launches plus the wave's wall-clock ``t_s`` and per-stage
     ``stage_s`` rollup).  When tracing is enabled the wave runs under a
     ``router:wave`` span whose children are the bucket dispatch spans.
+
+    ``recovery`` (a router's ``_Recovery``, None for bare callers)
+    activates the wave-level recovery ladder: transient dispatch faults
+    retry with capped backoff, failing/corrupt FM groups degrade down
+    the mode ladder, and a group that fails beyond the ladder is
+    *isolated* — each of its works re-runs as a singleton dispatch so
+    one poisoned lane cannot fail its co-riders; works that still fail
+    come back as ``_WorkFailed`` results (the router excises their task
+    trees) while every other result slot stays valid.
     """
     for w in works:
         work_kind(w)                    # reject unknown kinds up front
@@ -180,6 +355,57 @@ def execute_wave(works: List, level: Optional[int] = None,
     t_wave = time.perf_counter()
     tag_of = (lambda i: None) if tags is None else (lambda i: tags[i])
     group_tags: Dict[Tuple, set] = defaultdict(set)
+    rec = recovery
+
+    def guarded(kind: str, idxs: List[int], run_all, run_one) -> List:
+        """Rungs 1+3 around one bucket-group dispatch: retry the whole
+        group, then isolate per-work on terminal failure."""
+        if rec is None:
+            return run_all()
+        tags_l = [tag_of(i) for i in idxs]
+        try:
+            return rec.retry_loop(kind, tags_l, run_all)
+        except Exception as err:
+            rec.note_isolate(kind, tags_l, err)
+            outs: List = []
+            for i in idxs:
+                try:
+                    outs.append(rec.retry_loop(
+                        kind, [tag_of(i)], lambda i=i: run_one(i)))
+                except Exception as e1:
+                    outs.append(_WorkFailed(e1))
+            return outs
+
+    def guarded_fm(items: List[Tuple[int, Optional[int], FMWork]]
+                   ) -> List:
+        """FM groups additionally split by each request's sticky
+        degrade level and run through the mode ladder (rung 2)."""
+        if rec is None:
+            return execute_fm_works([w for _, _, w in items])
+        by_level: Dict[int, List[int]] = defaultdict(list)
+        for pos, (i, _, _w) in enumerate(items):
+            by_level[rec.level_of(tag_of(i))].append(pos)
+        outs: List = [None] * len(items)
+        for level in sorted(by_level):
+            poss = by_level[level]
+            g_works = [items[p][2] for p in poss]
+            g_tags = [tag_of(items[p][0]) for p in poss]
+            try:
+                g_outs = _fm_ladder(rec, g_works, g_tags, level)
+            except Exception as err:
+                rec.note_isolate("fm", g_tags, err)
+                g_outs = []
+                for p in poss:
+                    i, _, w = items[p]
+                    try:
+                        g_outs.append(_fm_ladder(
+                            rec, [w], [tag_of(i)],
+                            rec.level_of(tag_of(i)))[0])
+                    except Exception as e1:
+                        g_outs.append(_WorkFailed(e1))
+            for p, r in zip(poss, g_outs):
+                outs[p] = r
+        return outs
 
     def note(kind: str, n_works: int, n_buckets: int) -> None:
         summary["works"][kind] = summary["works"].get(kind, 0) + n_works
@@ -213,7 +439,7 @@ def execute_wave(works: List, level: Optional[int] = None,
             obs.span("router:wave", level=level, works=len(works),
                      requests=n_requests):
         if fm_items:
-            outs = execute_fm_works([w for _, _, w in fm_items])
+            outs = guarded_fm(fm_items)
             for (i, j, _), r in zip(fm_items, outs):
                 if j is None:
                     results[i] = r
@@ -224,7 +450,10 @@ def execute_wave(works: List, level: Optional[int] = None,
             for i, _, w in fm_items:
                 group_tags[("fm", w.bucket_key())].add(tag_of(i))
         if bfs_items:
-            outs = execute_bfs_works([w for _, w in bfs_items])
+            outs = guarded(
+                "bfs", [i for i, _ in bfs_items],
+                lambda: execute_bfs_works([w for _, w in bfs_items]),
+                lambda i: execute_bfs_works([works[i]])[0])
             for (i, _), r in zip(bfs_items, outs):
                 results[i] = r
             note("bfs", len(bfs_items),
@@ -232,7 +461,10 @@ def execute_wave(works: List, level: Optional[int] = None,
             for i, w in bfs_items:
                 group_tags[("bfs", w.bucket_key())].add(tag_of(i))
         if mt_items:
-            outs = execute_match_works([w for _, w in mt_items])
+            outs = guarded(
+                "match", [i for i, _ in mt_items],
+                lambda: execute_match_works([w for _, w in mt_items]),
+                lambda i: execute_match_works([works[i]])[0])
             for (i, _), r in zip(mt_items, outs):
                 results[i] = r
             note("match", len(mt_items),
@@ -254,22 +486,27 @@ def execute_wave(works: List, level: Optional[int] = None,
         for key, idxs in groups.items():
             kind = key[0]
             counts[kind].append(len(idxs))
-            lane_tags = (None if tags is None
-                         else [tags[i] for i in idxs])
-            if kind == "dmatch":
-                outs = distributed_matching_stacked(
-                    [works[i].dg for i in idxs],
-                    [works[i].seed for i in idxs], key[2],
-                    tags=lane_tags)
-            elif kind == "dbfs":
-                outs = distributed_bfs_stacked(
-                    [works[i].dg for i in idxs],
-                    [works[i].src for i in idxs], key[2],
-                    tags=lane_tags)
-            else:
-                outs = halo_exchange_stacked(
-                    [works[i].dg for i in idxs],
-                    [works[i].x for i in idxs], tags=lane_tags)
+
+            def launch(sub: List[int], kind=kind, key=key) -> List:
+                lane_tags = (None if tags is None
+                             else [tags[i] for i in sub])
+                if kind == "dmatch":
+                    return distributed_matching_stacked(
+                        [works[i].dg for i in sub],
+                        [works[i].seed for i in sub], key[2],
+                        tags=lane_tags)
+                if kind == "dbfs":
+                    return distributed_bfs_stacked(
+                        [works[i].dg for i in sub],
+                        [works[i].src for i in sub], key[2],
+                        tags=lane_tags)
+                return halo_exchange_stacked(
+                    [works[i].dg for i in sub],
+                    [works[i].x for i in sub], tags=lane_tags)
+
+            outs = guarded(kind, idxs,
+                           lambda idxs=idxs: launch(idxs),
+                           lambda i: launch([i])[0])
             for i, r in zip(idxs, outs):
                 results[i] = r
             group_tags[key].update(tag_of(i) for i in idxs)
@@ -345,6 +582,12 @@ def _advance(task: _Task, value, blocked: List[Tuple[_Task, object]]
         return
 
 
+def _root_of(task: _Task) -> _Task:
+    while task.parent is not None:
+        task = task.parent
+    return task
+
+
 class WaveRouter:
     """Shared frontier driver over any number of submitted task trees.
 
@@ -382,13 +625,18 @@ class WaveRouter:
     the waves it actually rode, not the whole drain's wall.
     """
 
-    def __init__(self, cfg: Optional[RouterConfig] = None):
+    def __init__(self, cfg: Optional[RouterConfig] = None,
+                 recovery_cfg: Optional[_faults.RecoveryConfig] = None):
         self.cfg = cfg or global_config
         self.cfg.apply()
         self._roots: List[_Task] = []
         self._blocked: List[Tuple[_Task, object]] = []
         self._level = 0
         self.exec_s_by_tag: Dict = defaultdict(float)
+        self.recovery = _Recovery(recovery_cfg)
+        self._stragglers = StragglerMonitor(
+            factor=self.cfg.straggler_factor)
+        self._waves = 0
 
     def submit(self, gen, tag=None) -> int:
         """Register one task tree; returns its index into ``run()``."""
@@ -411,6 +659,7 @@ class WaveRouter:
         pump loop can detect quiescence).
         """
         waves = 0
+        wave_retries = 0
         while self._blocked and (max_waves is None or waves < max_waves):
             if select is None:
                 active, parked = self._blocked, []
@@ -422,8 +671,30 @@ class WaveRouter:
                 break
             self._blocked = []
             tags = [t.tag for t, _ in active]
-            results, summary = execute_wave(
-                [w for _, w in active], level=self._level, tags=tags)
+            t0 = time.perf_counter()
+            try:
+                inj = _faults.active()
+                if inj is not None:
+                    inj.check("wave", tags=tags)
+                results, summary = execute_wave(
+                    [w for _, w in active], level=self._level, tags=tags,
+                    recovery=self.recovery)
+            except BaseException as err:
+                # exception-safe unwind: active and parked entries go
+                # back on the frontier *before* anything propagates, so
+                # the suspended generators stay resumable and the next
+                # drain does not trip the live-tasks assertion
+                self._blocked = active + parked
+                if (_faults.is_transient(err) and wave_retries
+                        < self.recovery.cfg.max_retries):
+                    wave_retries += 1
+                    self.recovery.note_retry("wave", tags, wave_retries)
+                    continue
+                raise
+            wave_retries = 0
+            if self._stragglers.observe(time.perf_counter() - t0):
+                obs.REGISTRY.inc("repro_router_straggler_waves_total")
+                summary["straggler"] = True
             summary["level"] = self._level
             summary["parked"] = len(parked)
             _dg._note_wave(summary)
@@ -432,12 +703,52 @@ class WaveRouter:
             share = summary["t_s"] / len(tags)
             for tag in tags:
                 self.exec_s_by_tag[tag] += share
+            dead: set = set()
             for (t, _), r in zip(active, results):
-                _advance(t, r, self._blocked)
+                root = _root_of(t)
+                if id(root) in dead:
+                    continue            # tree already excised this wave
+                err = _failure_of(r)
+                if err is None:
+                    try:
+                        _advance(t, r, self._blocked)
+                        continue
+                    except Exception as adv_err:
+                        # a generator choking on its (possibly faulted)
+                        # result fails only its own tree
+                        err = adv_err
+                dead.add(id(root))
+                self._excise(root, err)
             self._blocked.extend(parked)
+            self._waves += 1
             self._level += 1
             waves += 1
         return waves
+
+    def _excise(self, root: _Task, error: BaseException) -> None:
+        """Rung 3: terminally fail ONE task tree mid-drain.
+
+        The root completes with a ``TaskFailure`` result and every
+        blocked entry of its tree leaves the frontier — co-riding
+        requests keep their lanes and their pending works untouched.
+        The service decides what a ``TaskFailure`` means (cold
+        re-admission or ``status=failed`` fan-out).
+        """
+        root.done = True
+        root.result = TaskFailure(error)
+        self._blocked = [(t, w) for (t, w) in self._blocked
+                         if _root_of(t) is not root]
+        with obs.span("recover:excise", tag=str(root.tag),
+                      error=type(error).__name__):
+            pass
+
+    def stats(self) -> dict:
+        """Wave-level robustness counters (service ``stats()`` surfaces
+        these as ``router``)."""
+        return {"waves": self._waves,
+                "straggler_waves": self._stragglers.flagged,
+                "wave_ewma_s": float(self._stragglers.ewma or 0.0),
+                "isolations": self.recovery.isolations}
 
     def live_tags(self) -> List:
         """Tags of submitted roots that have not finished yet."""
@@ -457,10 +768,19 @@ class WaveRouter:
         return out
 
     def run(self) -> List:
-        """Drive all submitted trees to completion; results in order."""
+        """Drive all submitted trees to completion; results in order.
+
+        A tree excised by the recovery ladder re-raises its failure
+        here — bare callers (``drive_frontier``, the dnd entry points)
+        see the real error; only the service, which drains through
+        ``pump``/``pop_completed``, handles ``TaskFailure`` results.
+        """
         self.pump()
         assert all(t.done for t in self._roots), \
             "router finished with live tasks"
+        for t in self._roots:
+            if isinstance(t.result, TaskFailure):
+                raise t.result.error
         return [t.result for t in self._roots]
 
 

@@ -11,7 +11,12 @@ orderings advance each pump.  The decision is a ``PumpPlan``:
     (the complement is **parked**: their generators stay suspended);
   * ``max_waves`` — this pump's preemption budget, i.e. how many waves
     run before control returns to the policy so newly submitted small
-    requests get a scheduling opportunity.
+    requests get a scheduling opportunity;
+  * ``shed`` — queued requests whose explicit deadlines are infeasible
+    even starting now (judged from measured per-class exec estimates);
+    the service resolves them terminally as ``status=shed`` instead of
+    letting a doomed queue collapse everyone's deadlines (recovery
+    ladder rung 5, DESIGN.md §8).
 
 The default ``SchedPolicy`` is strict size-class priority with EDF
 within a class, plus two anti-starvation escapes:
@@ -80,6 +85,9 @@ class PumpPlan:
     active: Set[str]                # in-flight + admitted tags that run
     parked: Set[str]                # complement: suspended this pump
     max_waves: int                  # the pump's preemption budget
+    #: queued tags shed by feasibility admission control (rung 5,
+    #: DESIGN.md §8): the service resolves their riders ``status=shed``
+    shed: List[str] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -96,6 +104,17 @@ class PolicyConfig:
     rescue_margin_s: float = 0.25
     #: hard bound on continuous parking (starvation escape)
     max_park_s: float = 30.0
+    #: deadline-feasibility shedding (REPRO_SHED=0 disables): a queued
+    #: request with an *explicit* deadline is shed when even an
+    #: immediate start could not finish in time, judged from the
+    #: service's measured per-class exec percentiles
+    shed_infeasible: bool = dataclasses.field(
+        default_factory=lambda: os.environ.get("REPRO_SHED", "1") != "0")
+    #: slack multiplier on the exec estimate: shed iff
+    #: deadline - now < shed_factor * est_exec_s
+    shed_factor: float = dataclasses.field(
+        default_factory=lambda: float(os.environ.get("REPRO_SHED_FACTOR",
+                                                     "1.0")))
 
 
 class SchedPolicy:
@@ -107,16 +126,39 @@ class SchedPolicy:
 
     # -------------------------------------------------------------- #
     def plan(self, queued: Sequence[ReqMeta], inflight: Sequence[ReqMeta],
-             now: float) -> PumpPlan:
-        """Decide admissions and the active set for one pump.
+             now: float,
+             exec_est: Optional[Dict[str, float]] = None) -> PumpPlan:
+        """Decide admissions, sheds, and the active set for one pump.
 
         ``queued`` are admission-queue heads (not yet on the router);
         ``inflight`` are suspended-or-running orderings.  Everything
-        queued is admitted (admission itself is cheap — parking is what
-        throttles execution), ordered (class rank, effective deadline,
-        enqueue time); the active set is computed over the union.
+        queued and feasible is admitted (admission itself is cheap —
+        parking is what throttles execution), ordered (class rank,
+        effective deadline, enqueue time); the active set is computed
+        over the union.
+
+        ``exec_est`` maps size class → an exec-seconds estimate (the
+        service passes its measured per-class p50).  A queued request
+        with an **explicit** deadline that even an immediate start
+        could not meet (``deadline - now < shed_factor × est``) is shed
+        instead of admitted — its riders get a clean terminal
+        ``status=shed`` rather than dragging the queue into collapse.
+        SLO-defaulted deadlines never shed (the SLO is a target, not a
+        contract), and classes with no measurement yet are assumed
+        feasible.
         """
         cfg = self.cfg
+        shed: List[str] = []
+        if cfg.shed_infeasible and exec_est:
+            feasible = []
+            for m in queued:
+                est = exec_est.get(m.size_class)
+                if (m.deadline is not None and est is not None
+                        and m.deadline - now < cfg.shed_factor * est):
+                    shed.append(m.tag)
+                else:
+                    feasible.append(m)
+            queued = feasible
         admit = sorted(
             queued, key=lambda m: (class_rank(m.size_class),
                                    m.effective_deadline(), m.t_enqueue))
@@ -139,7 +181,8 @@ class SchedPolicy:
             self._parked_since.setdefault(tag, now)
         assert not live or active, "policy parked every live ordering"
         return PumpPlan(admit=[m.tag for m in admit], active=active,
-                        parked=parked, max_waves=max(cfg.wave_budget, 1))
+                        parked=parked, max_waves=max(cfg.wave_budget, 1),
+                        shed=shed)
 
     # -------------------------------------------------------------- #
     def _runs(self, m: ReqMeta, min_rank: int, now: float) -> bool:

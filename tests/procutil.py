@@ -1,0 +1,49 @@
+"""Hardened subprocess runner for the 8-virtual-device tests.
+
+Every SPMD test forks a fresh interpreter (``XLA_FLAGS=...device_count=8``
+must be set before jax imports), prints one JSON line, and exits.  The
+old per-file ``subprocess.run(..., timeout=N)`` copies had a shared
+hang mode: on a wedged backend, ``run`` kills the *child* but then
+blocks in ``communicate()`` while any grandchild/thread keeps the
+captured pipe open — CI hangs to the job timeout instead of failing
+fast.  This runner starts the child in its own session and, on
+timeout, SIGKILLs the whole process group before failing the test with
+the stderr tail.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+
+#: default child budget, under the CI job timeout with room to report
+DEFAULT_TIMEOUT = 560
+
+
+def run_json_script(script: str, timeout: int = DEFAULT_TIMEOUT,
+                    env: dict = None) -> dict:
+    """Run ``python -c script`` hermetically; parse its last stdout
+    line as JSON.  Hard timeout: the child's entire process group is
+    killed and the test fails immediately (no CI hang)."""
+    child_env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                 "HOME": os.environ.get("HOME", "/root"),
+                 "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
+    if env:
+        child_env.update(env)
+    proc = subprocess.Popen([sys.executable, "-c", script],
+                            stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE, text=True,
+                            env=child_env, start_new_session=True)
+    try:
+        out, err = proc.communicate(timeout=timeout)
+    except subprocess.TimeoutExpired:
+        try:
+            os.killpg(os.getpgid(proc.pid), signal.SIGKILL)
+        except (ProcessLookupError, PermissionError):
+            proc.kill()
+        out, err = proc.communicate()
+        raise AssertionError(
+            f"subprocess exceeded {timeout}s and was killed (group)"
+            f"\nstderr tail: {(err or '')[-2000:]}")
+    assert proc.returncode == 0, (err or "")[-2000:]
+    return json.loads(out.strip().splitlines()[-1])

@@ -2,14 +2,12 @@
 in a subprocess with 8 host devices (keeps the main test process at 1
 device).  Host-only DGraph helpers (single-part mesh, to_host round trip)
 run in-process."""
-import json
-import os
-import subprocess
-import sys
 import textwrap
 
 import numpy as np
 import pytest
+
+from procutil import run_json_script
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -75,14 +73,7 @@ SCRIPT = textwrap.dedent("""
 def run_spmd(script):
     # Pin the backend: without JAX_PLATFORMS the child process probes for
     # accelerator plugins, which can hang far longer than the compute.
-    res = subprocess.run([sys.executable, "-c", script],
-                         capture_output=True, text=True, timeout=300,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root",
-                              "JAX_PLATFORMS": os.environ.get(
-                                  "JAX_PLATFORMS", "cpu")})
-    assert res.returncode == 0, res.stderr[-2000:]
-    return json.loads(res.stdout.strip().splitlines()[-1])
+    return run_json_script(script, timeout=300)
 
 
 def test_spmd_halo_bfs_matching():

@@ -5,13 +5,11 @@ The grid case (plus the fixed-seed determinism check) runs by default;
 the heavier rgg case is ``slow``-marked and runs in the CI ``spmd`` job
 (``--runslow``).
 """
-import json
-import os
-import subprocess
-import sys
 import textwrap
 
 import pytest
+
+from procutil import run_json_script
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -46,14 +44,7 @@ SCRIPT = textwrap.dedent("""
 
 def _run(graphs: str, determinism: bool) -> dict:
     script = SCRIPT.format(graphs=graphs, determinism=determinism)
-    res = subprocess.run([sys.executable, "-c", script],
-                         capture_output=True, text=True, timeout=560,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root",
-                              "JAX_PLATFORMS": os.environ.get(
-                                  "JAX_PLATFORMS", "cpu")})
-    assert res.returncode == 0, res.stderr[-2000:]
-    return json.loads(res.stdout.strip().splitlines()[-1])
+    return run_json_script(script)
 
 
 def _check_parity(out, names):

@@ -2,14 +2,12 @@
 per-wave launch budgets, and frontier-vs-depth-first ordering identity
 (subprocess with 8 virtual host devices), plus host-side checks of the
 consolidated instrumentation entry point."""
-import json
-import os
-import subprocess
-import sys
 import textwrap
 
 import numpy as np
 import pytest
+
+from procutil import run_json_script
 
 
 # ------------------------------------------------------------------ #
@@ -78,14 +76,7 @@ _SCRIPT_CACHE: dict = {}
 def _run_script(script: str, timeout: int = 560) -> dict:
     if script in _SCRIPT_CACHE:         # several tests share one run
         return _SCRIPT_CACHE[script]
-    res = subprocess.run([sys.executable, "-c", script],
-                         capture_output=True, text=True, timeout=timeout,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": os.environ.get("HOME", "/root"),
-                              "JAX_PLATFORMS": os.environ.get(
-                                  "JAX_PLATFORMS", "cpu")})
-    assert res.returncode == 0, res.stderr[-2000:]
-    out = json.loads(res.stdout.strip().splitlines()[-1])
+    out = run_json_script(script, timeout=timeout)
     _SCRIPT_CACHE[script] = out
     return out
 

@@ -1,14 +1,12 @@
 """Gather-free distributed ND: structure-rebuild parity vs the host ops,
 the distributed ordering tree, and (in a subprocess with 8 host devices)
 the no-centralization guarantee + band-path equivalence."""
-import json
-import os
-import subprocess
-import sys
 import textwrap
 
 import numpy as np
 import pytest
+
+from procutil import run_json_script
 
 
 def _mk(seed=0):
@@ -269,14 +267,7 @@ def test_execute_match_works_composition_independent():
 # subprocess (8 virtual host devices): the gather-free guarantees
 # ------------------------------------------------------------------ #
 def _run_script(script: str, timeout: int = 560) -> dict:
-    res = subprocess.run([sys.executable, "-c", script],
-                         capture_output=True, text=True, timeout=timeout,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": os.environ.get("HOME", "/root"),
-                              "JAX_PLATFORMS": os.environ.get(
-                                  "JAX_PLATFORMS", "cpu")})
-    assert res.returncode == 0, res.stderr[-2000:]
-    return json.loads(res.stdout.strip().splitlines()[-1])
+    return run_json_script(script, timeout=timeout)
 
 
 ND_SCRIPT = textwrap.dedent("""

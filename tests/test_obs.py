@@ -4,8 +4,6 @@ frontier + DFS distributed drivers in a subprocess with virtual
 devices), the disabled-overhead budget, metrics registry, and the
 trace_summary coverage contract."""
 import json
-import os
-import subprocess
 import sys
 import textwrap
 import threading
@@ -13,6 +11,7 @@ import time
 
 import numpy as np
 
+from procutil import run_json_script
 from repro import obs
 
 
@@ -292,14 +291,7 @@ _DIST_SCRIPT = textwrap.dedent("""
 
 
 def test_distributed_drivers_bit_identical_with_tracing():
-    res = subprocess.run(
-        [sys.executable, "-c", _DIST_SCRIPT],
-        capture_output=True, text=True, timeout=560,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": os.environ.get("HOME", "/root"),
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
-    assert res.returncode == 0, res.stderr[-2000:]
-    out = json.loads(res.stdout.strip().splitlines()[-1])
+    out = run_json_script(_DIST_SCRIPT)
     assert out["perm_ok"]
     assert out["all_equal"], \
         "tracing or driver choice changed the ordering"

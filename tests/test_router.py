@@ -8,13 +8,11 @@ live shape buckets even when lanes come from different requests, and the
 shared drain needs strictly fewer collective launches than sequential
 drains — runs in a subprocess with 8 virtual host devices (slow).
 """
-import json
-import os
-import subprocess
-import sys
 import textwrap
 
 import pytest
+
+from procutil import run_json_script
 
 
 # ------------------------------------------------------------------ #
@@ -86,14 +84,7 @@ _SCRIPT_CACHE: dict = {}
 def _run_script(script: str, timeout: int = 560) -> dict:
     if script in _SCRIPT_CACHE:
         return _SCRIPT_CACHE[script]
-    res = subprocess.run([sys.executable, "-c", script],
-                         capture_output=True, text=True, timeout=timeout,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": os.environ.get("HOME", "/root"),
-                              "JAX_PLATFORMS": os.environ.get(
-                                  "JAX_PLATFORMS", "cpu")})
-    assert res.returncode == 0, res.stderr[-2000:]
-    out = json.loads(res.stdout.strip().splitlines()[-1])
+    out = run_json_script(script, timeout=timeout)
     _SCRIPT_CACHE[script] = out
     return out
 

@@ -7,14 +7,12 @@ and deadline + per-class accounting must be exact.  The distributed
 variant (a sharded ordering preempted between its waves by host
 requests) runs in a subprocess with 8 virtual devices (slow).
 """
-import json
-import os
-import subprocess
-import sys
 import textwrap
 
 import numpy as np
 import pytest
+
+from procutil import run_json_script
 
 from repro.core.nd import nested_dissection, valid_warm_part
 from repro.graphs import generators as G
@@ -159,7 +157,11 @@ def test_warm_off_by_default_keeps_determinism_contract():
 # deadlines + per-class stats
 # ------------------------------------------------------------------ #
 def test_deadline_accounting_and_per_class_stats():
-    svc = OrderingService()
+    # shedding off: this test wants the already-late request *computed*
+    # so the miss accounting is exercised (feasibility shedding would
+    # terminate it as status=shed before it ever ran)
+    svc = OrderingService(policy=SchedPolicy(PolicyConfig(
+        shed_infeasible=False)))
     rid_ok = svc.submit(G.grid2d(9, 9), seed=0, deadline_s=1000.0)
     svc.drain()
     assert svc.poll(rid_ok).deadline_missed is False
@@ -233,20 +235,9 @@ SLO_SCRIPT = textwrap.dedent("""
 """)
 
 
-def _run_script(script: str, timeout: int = 560) -> dict:
-    res = subprocess.run([sys.executable, "-c", script],
-                         capture_output=True, text=True, timeout=timeout,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": os.environ.get("HOME", "/root"),
-                              "JAX_PLATFORMS": os.environ.get(
-                                  "JAX_PLATFORMS", "cpu")})
-    assert res.returncode == 0, res.stderr[-2000:]
-    return json.loads(res.stdout.strip().splitlines()[-1])
-
-
 @pytest.mark.slow
 def test_distributed_ordering_preempted_by_host_requests():
-    out = _run_script(SLO_SCRIPT)
+    out = run_json_script(SLO_SCRIPT)
     assert out["terminated"], "distributed pump loop did not terminate"
     assert out["big_parity"], \
         "preempted distributed ordering differs from uninterrupted run"
